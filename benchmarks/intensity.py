@@ -1,0 +1,61 @@
+"""Figs. 10-11: performance vs operational intensity.
+
+Points per network: unfused layer-by-layer, fused naive-stride (Baselines
+1-2), fused uniform-stride (Baseline-3 + proposed), each with the DS-1 /
+conventional durations from the cycle models.  The paper's headline — the
+uniform-stride OI improvement (8.2x / 17.8x / 279.4x) — is reproduced by
+``intensity_improvement`` (LeNet exact; AlexNet/VGG same order, the paper's
+byte accounting is under-specified — EXPERIMENTS.md §Intensity).
+"""
+
+from __future__ import annotations
+
+from repro.core.cnn_models import NETWORKS, PAPER_OPS, PAPER_OUT_REGION
+from repro.core.cycle_model import evaluate_design
+from repro.core.fusion import plan_fusion
+from repro.core.intensity import (
+    IntensityPoint,
+    fused_bytes,
+    intensity_improvement,
+    unfused_bytes,
+)
+
+PAPER_OI_IMPROVEMENT = {"lenet": 8.2, "alexnet": 17.8, "vgg": 279.4}
+
+
+def points(net: str) -> list[IntensityPoint]:
+    spec = NETWORKS[net]
+    plan = plan_fusion(spec, out_region=PAPER_OUT_REGION[net])
+    ops = PAPER_OPS[(net, "Fused")]
+    ds1_uni = evaluate_design("ds1", spec, plan, ops)
+    ds1_naive = evaluate_design("ds1", spec, plan, ops, uniform_stride=False)
+    conv_uni = evaluate_design("baseline_spatial", spec, plan, ops)
+    return [
+        IntensityPoint("unfused_conventional", ops, unfused_bytes(spec),
+                       conv_uni.duration_us),
+        IntensityPoint("fused_naive_stride(B1/B2)", ops,
+                       fused_bytes(spec, plan, uniform=False),
+                       ds1_naive.duration_us),
+        IntensityPoint("fused_uniform_B3", ops, fused_bytes(spec, plan),
+                       conv_uni.duration_us),
+        IntensityPoint("fused_uniform_DS1", ops, fused_bytes(spec, plan),
+                       ds1_uni.duration_us),
+    ]
+
+
+def run(csv=print):
+    csv("fig,net,design,ops_per_byte,gops")
+    for net in NETWORKS:
+        for p in points(net):
+            csv(f"F11_intensity,{net},{p.design},{p.intensity:.2f},{p.gops:.2f}")
+        spec = NETWORKS[net]
+        plan = plan_fusion(spec, out_region=PAPER_OUT_REGION[net])
+        imp = intensity_improvement(spec, plan)
+        csv(
+            f"F11_oi_improvement,{net},uniform_vs_naive,{imp:.1f}x,"
+            f"paper={PAPER_OI_IMPROVEMENT[net]}x"
+        )
+
+
+if __name__ == "__main__":
+    run()

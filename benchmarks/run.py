@@ -1,0 +1,66 @@
+"""Benchmark harness: one section per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run``  prints ``name,...`` CSV rows:
+
+* Tables 1-4 — DS-1/DS-2 cycle-model durations vs the paper (paper_tables)
+* Figs 10-11 — performance vs operational intensity (intensity)
+* Figs 12-14 — END detection / energy / ResNet-18 cycle savings (end_savings)
+* Kernel wall-time sanity (interpret mode; TPU timing is the dry-run's job)
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def _kernel_micro():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.cnn_models import LENET5_FUSION
+    from repro.core.executor import init_pyramid_params
+    from repro.kernels.fused_conv.ops import fused_conv2
+    from repro.kernels.online_sop.ops import online_sop_end
+
+    params = init_pyramid_params(LENET5_FUSION, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32, 1))
+    args = (x, params.weights[0], params.biases[0], params.weights[1],
+            params.biases[1])
+    out, _ = fused_conv2(*args, spec=LENET5_FUSION, out_region=1)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        out, _ = fused_conv2(*args, spec=LENET5_FUSION, out_region=1)
+        jax.block_until_ready(out)
+    dt = (time.perf_counter() - t0) / 3
+    print(f"kernel_fused_conv_lenet,interpret,{dt * 1e6:.0f},us_per_call")
+
+    xs = jnp.asarray(np.random.default_rng(0).uniform(-0.03, 0.03, (512, 25)),
+                     jnp.float32)
+    y = jnp.asarray(np.random.default_rng(1).uniform(-0.5, 0.5, (25,)),
+                    jnp.float32) / 4
+    s, _, _ = online_sop_end(xs, y, 16)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        s, _, _ = online_sop_end(xs, y, 16)
+        jax.block_until_ready(s)
+    dt = (time.perf_counter() - t0) / 3
+    print(f"kernel_online_sop_512x25,interpret,{dt * 1e6:.0f},us_per_call")
+
+
+def main() -> None:
+    from benchmarks import end_savings, intensity, paper_tables
+
+    print("== Tables 1-4: cycle models vs paper ==")
+    paper_tables.run()
+    print("== Figs 10-11: operational intensity ==")
+    intensity.run()
+    print("== Figs 12-14: END savings ==")
+    end_savings.run()
+    print("== kernels (interpret-mode wall time; TPU perf comes from the"
+          " dry-run roofline) ==")
+    _kernel_micro()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Batched serving example (deliverable b): greedy decode with KV caches on
+every architecture family.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch.serve import serve
+
+for arch in ("deepseek_7b", "mamba2_780m", "qwen2_moe_a2_7b"):
+    gen, tps = serve(arch, batch=2, new_tokens=12)
+    print(f"{arch:18s} generated {gen.shape[1]} tokens/seq at {tps:.1f} tok/s")

@@ -1,0 +1,56 @@
+"""End-to-end LM training driver (deliverable b): a ~100M-param dense model
+trained for a few hundred steps with the full production stack — data
+pipeline, sharded AdamW, checkpoint/restart.
+
+Run:  PYTHONPATH=src python examples/train_lm.py  [--steps 300]
+
+Runtime note: each step is ~0.6 TFLOP; seconds on any accelerator, ~30 s
+on this 1-core CPU container (use --steps 10 for a smoke pass; the loop,
+checkpointing and restart logic are covered by tests/test_integration.py).
+"""
+
+import argparse
+import dataclasses
+
+from repro.configs import get_config
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    # ~100M params: deepseek-7b family scaled to 12 layers x 768
+    import repro.configs.deepseek_7b as ds
+
+    cfg = dataclasses.replace(
+        ds.CONFIG,
+        n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, d_head=64,
+        d_ff=2048, vocab=32000, remat="none",
+    )
+    import repro.configs.base as base
+
+    # register as a transient config the trainer can resolve
+    import repro.launch.train as T
+
+    orig = T.get_config
+    T.get_config = lambda name: cfg if name == "lm100m" else orig(name)
+    losses = train(
+        "lm100m",
+        steps=args.steps,
+        reduced=False,
+        seq_len=args.seq_len,
+        global_batch=args.global_batch,
+        ckpt_dir=args.ckpt_dir,
+        log_every=20,
+    )
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} steps")
+    assert losses[-1] < losses[0], "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

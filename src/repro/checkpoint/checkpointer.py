@@ -1,0 +1,135 @@
+"""Checkpointing: async snapshot, manifest + content hashes, elastic restore.
+
+Fault-tolerance contract (DESIGN.md §6):
+
+* ``save`` snapshots device arrays to host (blocking only for the copy),
+  then writes shards + a manifest (tree structure, shapes, dtypes, sha256
+  per shard, step) on a background thread — the training loop keeps going.
+* ``restore`` verifies hashes, rebuilds the tree, and **re-shards to the
+  current mesh** (elastic: a 512-chip checkpoint restores onto 256 chips or
+  vice versa — jax.device_put with the target sharding does the resharding).
+* Partial/corrupt checkpoints are detected via the manifest hash set and the
+  newest *complete* step wins (``latest_complete``).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import threading
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def _sanitize(p: str) -> str:
+    return p.replace("[", "_").replace("]", "").replace("'", "").replace("/", "__")
+
+
+@dataclass
+class Checkpointer:
+    directory: str
+    keep: int = 3
+
+    def __post_init__(self):
+        Path(self.directory).mkdir(parents=True, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, *, blocking: bool = False):
+        """Snapshot to host, then write in the background."""
+        self.wait()  # one in-flight save at a time
+        paths, leaves, _ = _flatten_with_paths(tree)
+        host = [np.asarray(jax.device_get(l)) for l in leaves]
+
+        def write():
+            d = Path(self.directory) / f"step_{step:010d}.tmp"
+            d.mkdir(parents=True, exist_ok=True)
+            manifest = {"step": step, "shards": {}}
+            for p, arr in zip(paths, host):
+                fn = _sanitize(p) + ".npy"
+                # non-native dtypes (bfloat16) round-trip as uint16 views;
+                # the manifest records the true dtype
+                to_save = arr.view(np.uint16) if arr.dtype.name == "bfloat16" else arr
+                np.save(d / fn, to_save)
+                h = hashlib.sha256((d / fn).read_bytes()).hexdigest()
+                manifest["shards"][p] = {
+                    "file": fn,
+                    "shape": list(arr.shape),
+                    "dtype": str(arr.dtype),
+                    "sha256": h,
+                }
+            (d / "manifest.json").write_text(json.dumps(manifest))
+            final = Path(self.directory) / f"step_{step:010d}"
+            os.rename(d, final)  # atomic completion marker
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        done = sorted(Path(self.directory).glob("step_??????????"))
+        for old in done[: -self.keep]:
+            for f in old.iterdir():
+                f.unlink()
+            old.rmdir()
+
+    # -- restore --------------------------------------------------------------
+
+    def latest_complete(self) -> int | None:
+        steps = []
+        for d in Path(self.directory).glob("step_??????????"):
+            if (d / "manifest.json").exists():
+                steps.append(int(d.name.split("_")[1]))
+        return max(steps) if steps else None
+
+    def restore(self, step: int, like: Any, shardings: Any | None = None) -> Any:
+        """Restore into the structure of ``like``; reshard onto ``shardings``
+        (a matching NamedSharding tree) if given — the elastic path."""
+        d = Path(self.directory) / f"step_{step:010d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        paths, like_leaves, treedef = _flatten_with_paths(like)
+        shard_leaves = (
+            jax.tree.leaves(shardings) if shardings is not None else [None] * len(paths)
+        )
+        out = []
+        for p, leaf, shard in zip(paths, like_leaves, shard_leaves):
+            meta = manifest["shards"][p]
+            fn = d / meta["file"]
+            blob = fn.read_bytes()
+            if hashlib.sha256(blob).hexdigest() != meta["sha256"]:
+                raise IOError(f"checkpoint shard corrupt: {p}")
+            arr = np.load(fn)
+            if meta["dtype"] == "bfloat16":
+                import ml_dtypes
+
+                arr = arr.view(ml_dtypes.bfloat16)
+            if list(arr.shape) != list(leaf.shape):
+                raise ValueError(
+                    f"shape mismatch for {p}: ckpt {arr.shape} vs model {leaf.shape}"
+                )
+            if shard is not None:
+                out.append(jax.device_put(arr, shard))
+            else:
+                out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, out)

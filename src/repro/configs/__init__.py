@@ -1,0 +1,18 @@
+"""Architecture configs: one module per assigned architecture.
+
+``get_config("<id>")`` resolves the registry; shapes live in
+:mod:`repro.configs.shapes`.
+"""
+
+from .base import ARCH_IDS, ArchConfig, all_configs, get_config
+from .shapes import SHAPES, ShapeConfig, cells
+
+__all__ = [
+    "ARCH_IDS",
+    "ArchConfig",
+    "SHAPES",
+    "ShapeConfig",
+    "all_configs",
+    "cells",
+    "get_config",
+]

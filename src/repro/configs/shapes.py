@@ -1,0 +1,58 @@
+"""Assigned input shapes and the (arch x shape) cell matrix.
+
+Four shapes per LM arch (seq_len x global_batch):
+
+* ``train_4k``    — 4,096 x 256, lowers ``train_step``
+* ``prefill_32k`` — 32,768 x 32, lowers ``prefill_step`` (forward, causal)
+* ``decode_32k``  — one new token against a 32,768 KV cache, batch 128,
+                    lowers ``serve_step``
+* ``long_500k``   — one new token against a 524,288 cache, batch 1, lowers
+                    ``serve_step``; requires sub-quadratic attention — run for
+                    SSM/hybrid archs only, skipped (and recorded) for pure
+                    full-attention archs per the assignment.
+
+Whisper (enc-dec) decodes against its audio cross-context; its ``seq_len``
+applies to the self-attention KV cache of the decoder, which is the shape's
+intent (the 448-token product limit is a checkpoint property, not an
+architecture one) — noted in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .base import ArchConfig
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str  # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_supported(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """(supported, reason-if-not) for one (arch x shape) cell."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, (
+            "long_500k requires sub-quadratic attention; "
+            f"{cfg.name} is pure full-attention (assignment: skip + record)"
+        )
+    return True, ""
+
+
+def cells(configs: dict[str, ArchConfig]):
+    """Yield (arch_id, cfg, shape, supported, reason) for the full matrix."""
+    for arch_id, cfg in configs.items():
+        for shape in SHAPES.values():
+            ok, why = cell_supported(cfg, shape)
+            yield arch_id, cfg, shape, ok, why

@@ -1,0 +1,67 @@
+"""USEFUSE core: the paper's contribution as composable JAX modules.
+
+Public API:
+
+* fusion planning — :mod:`repro.core.fusion` (Eq. (1), Algorithms 3-4)
+* online arithmetic — :mod:`repro.core.online_arith` (Algorithm 1, adders)
+* early negative detection — :mod:`repro.core.end_detect` (Algorithm 2)
+* cycle / performance models — :mod:`repro.core.cycle_model` (Eqs. (2)-(4))
+* operational intensity — :mod:`repro.core.intensity` (Figs. 10-11)
+* fused execution — :mod:`repro.core.executor`
+"""
+
+from .fusion import (
+    FusedLevel,
+    FusionPlan,
+    FusionSpec,
+    LockstepPlan,
+    lockstep_plan,
+    plan_fusion,
+    receptive_window,
+    tile_sizes,
+    uniform_tile_stride,
+)
+from .cycle_model import ArithParams, DesignResult, evaluate_design
+from .end_detect import EndStats, end_scan, end_statistics
+from .executor import (
+    PyramidParams,
+    fused_forward,
+    init_pyramid_params,
+    reference_forward,
+)
+from .online_arith import (
+    from_digits,
+    online_add,
+    online_mul_sp,
+    online_sop,
+    sop_digits_fast,
+    to_digits,
+)
+
+__all__ = [
+    "ArithParams",
+    "DesignResult",
+    "EndStats",
+    "FusedLevel",
+    "FusionPlan",
+    "FusionSpec",
+    "LockstepPlan",
+    "PyramidParams",
+    "end_scan",
+    "end_statistics",
+    "evaluate_design",
+    "from_digits",
+    "fused_forward",
+    "init_pyramid_params",
+    "lockstep_plan",
+    "online_add",
+    "online_mul_sp",
+    "online_sop",
+    "plan_fusion",
+    "receptive_window",
+    "reference_forward",
+    "sop_digits_fast",
+    "tile_sizes",
+    "to_digits",
+    "uniform_tile_stride",
+]

@@ -1,0 +1,139 @@
+"""CNN workload definitions used by the paper (§4.1).
+
+LeNet-5, AlexNet, VGG-16 and ResNet-18 convolution/pool stacks, expressed as
+:class:`~repro.core.fusion.FusedLevel` chains, plus the paper's fusion
+choices: LeNet-5 / AlexNet fuse the first two conv layers (+ their pools);
+VGG-16 fuses the first two blocks (four convs + two pools); ResNet-18 fuses
+consecutive conv pairs inside each residual block (first conv excluded).
+"""
+
+from __future__ import annotations
+
+from .fusion import FusedLevel, FusionSpec
+
+# ---------------------------------------------------------------------------
+# LeNet-5 (32x32x1 input) — paper's running example (§3.3.1)
+# ---------------------------------------------------------------------------
+
+LENET5_INPUT = 32
+LENET5_LEVELS = (
+    FusedLevel("conv", K=5, S=1, pad=0, n_in=1, n_out=6, name="CL1"),
+    FusedLevel("pool", K=2, S=2, pad=0, n_in=6, n_out=6, name="MPL1"),
+    FusedLevel("conv", K=5, S=1, pad=0, n_in=6, n_out=16, name="CL2"),
+    FusedLevel("pool", K=2, S=2, pad=0, n_in=16, n_out=16, name="MPL2"),
+)
+LENET5_FUSION = FusionSpec(levels=LENET5_LEVELS, input_size=LENET5_INPUT)
+
+# ---------------------------------------------------------------------------
+# AlexNet (227x227x3 input) — first two conv layers + pools fused
+# ---------------------------------------------------------------------------
+
+ALEXNET_INPUT = 227
+ALEXNET_LEVELS = (
+    FusedLevel("conv", K=11, S=4, pad=0, n_in=3, n_out=96, name="CONV1"),
+    FusedLevel("pool", K=3, S=2, pad=0, n_in=96, n_out=96, name="POOL1"),
+    FusedLevel("conv", K=5, S=1, pad=2, n_in=96, n_out=256, name="CONV2"),
+    FusedLevel("pool", K=3, S=2, pad=0, n_in=256, n_out=256, name="POOL2"),
+)
+ALEXNET_FUSION = FusionSpec(levels=ALEXNET_LEVELS, input_size=ALEXNET_INPUT)
+
+# ---------------------------------------------------------------------------
+# VGG-16 (224x224x3) — blocks 1-2 (four convs, two pools) fused
+# ---------------------------------------------------------------------------
+
+VGG_INPUT = 224
+VGG_BLOCK12_LEVELS = (
+    FusedLevel("conv", K=3, S=1, pad=1, n_in=3, n_out=64, name="CONV1"),
+    FusedLevel("conv", K=3, S=1, pad=1, n_in=64, n_out=64, name="CONV2"),
+    FusedLevel("pool", K=2, S=2, pad=0, n_in=64, n_out=64, name="POOL1"),
+    FusedLevel("conv", K=3, S=1, pad=1, n_in=64, n_out=128, name="CONV3"),
+    FusedLevel("conv", K=3, S=1, pad=1, n_in=128, n_out=128, name="CONV4"),
+    FusedLevel("pool", K=2, S=2, pad=0, n_in=128, n_out=128, name="POOL2"),
+)
+VGG_FUSION = FusionSpec(levels=VGG_BLOCK12_LEVELS, input_size=VGG_INPUT)
+
+# Full VGG-16 conv stack (for end-to-end §4.4 comparisons).
+VGG16_ALL_CONVS = (
+    # (K, S, pad, n_in, n_out, ifm)
+    (3, 1, 1, 3, 64, 224),
+    (3, 1, 1, 64, 64, 224),
+    (3, 1, 1, 64, 128, 112),
+    (3, 1, 1, 128, 128, 112),
+    (3, 1, 1, 128, 256, 56),
+    (3, 1, 1, 256, 256, 56),
+    (3, 1, 1, 256, 256, 56),
+    (3, 1, 1, 256, 512, 28),
+    (3, 1, 1, 512, 512, 28),
+    (3, 1, 1, 512, 512, 28),
+    (3, 1, 1, 512, 512, 14),
+    (3, 1, 1, 512, 512, 14),
+    (3, 1, 1, 512, 512, 14),
+)
+
+# ---------------------------------------------------------------------------
+# ResNet-18 (224x224x3) — §4.3 END experiment: fuse conv pairs per block
+# ---------------------------------------------------------------------------
+
+# (n_in, n_out, ifm, stride_of_first_conv) per residual block; two 3x3 convs
+# each.  conv1 (7x7/2) excluded from fusion per the paper.
+RESNET18_BLOCKS = (
+    (64, 64, 56, 1),
+    (64, 64, 56, 1),
+    (64, 128, 56, 2),
+    (128, 128, 28, 1),
+    (128, 256, 28, 2),
+    (256, 256, 14, 1),
+    (256, 512, 14, 2),
+    (512, 512, 7, 1),
+)
+
+
+def resnet18_block_fusion(n_in: int, n_out: int, ifm: int, s1: int) -> FusionSpec:
+    """Fusion pyramid for one residual block: conv3x3(s1) -> conv3x3(1)."""
+    return FusionSpec(
+        levels=(
+            FusedLevel("conv", K=3, S=s1, pad=1, n_in=n_in, n_out=n_out, name="convA"),
+            FusedLevel("conv", K=3, S=1, pad=1, n_in=n_out, n_out=n_out, name="convB"),
+        ),
+        input_size=ifm,
+    )
+
+
+def resnet18_fusions() -> list[FusionSpec]:
+    return [resnet18_block_fusion(*blk) for blk in RESNET18_BLOCKS]
+
+
+# ---------------------------------------------------------------------------
+# Paper Table 1/2 "Number of Operations" (as printed; see EXPERIMENTS.md for
+# the internal inconsistencies in the paper's own 2*M*N*R*C*K*K accounting)
+# ---------------------------------------------------------------------------
+
+PAPER_OPS = {
+    ("lenet", "CONV1"): 235_200,
+    ("lenet", "CONV2"): 940_800,
+    ("lenet", "Fused"): 1_183_880,
+    ("alexnet", "CONV1"): 105_415_200,
+    ("alexnet", "CONV2"): 223_948_800,
+    ("alexnet", "Fused"): 329_659_136,
+    ("vgg", "CONV1"): 173_408_256,
+    ("vgg", "CONV2"): 3_699_376_128,
+    ("vgg", "CONV3"): 1_849_688_064,
+    ("vgg", "CONV4"): 3_699_376_128,
+    ("vgg", "Fused"): 9_429_625_856,
+}
+
+
+def conv_ops(level: FusedLevel, out_size: int) -> int:
+    """2*M*N*R*C*K*K (Eq. 2's numerator) for one conv level."""
+    return 2 * level.n_out * level.n_in * out_size * out_size * level.K * level.K
+
+
+NETWORKS = {
+    "lenet": LENET5_FUSION,
+    "alexnet": ALEXNET_FUSION,
+    "vgg": VGG_FUSION,
+}
+
+# Paper-matching output-region pins (derived in DESIGN.md / validated in
+# tests): these yield alpha = 5 / 9 / 3 respectively via Algorithm 4.
+PAPER_OUT_REGION = {"lenet": 1, "alexnet": 1, "vgg": None}  # vgg: scan smallest

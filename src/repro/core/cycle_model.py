@@ -1,0 +1,243 @@
+"""USEFUSE cycle / performance models (paper §4.2, Eqs. (2)-(4)).
+
+Reproduces the paper's *proposed-design* durations exactly (validated in
+tests): with ``n=8, delta_olm=2, delta_ola=2, mp_cycles=2`` Eq. (3) yields the
+Table-1 fused durations 13.75 us (LeNet-5, alpha=5), 63.99 us (AlexNet,
+alpha=9) and 11.79 us (VGG blocks 1-2, alpha=3) at 100 MHz.
+
+Baseline models: the paper specifies its conventional-bit-serial baselines
+only structurally (UNPU-style AND-gate partial-product WPUs, Figs. 8-9); the
+printed baseline durations are not derivable from any formula given in the
+paper.  We therefore implement principled baseline models with explicit,
+documented assumptions (below) and report *both* our modeled speedups and the
+paper's printed ones in the benchmark tables.
+
+Baseline assumptions (conventional bit-serial, spatial):
+  * serial-parallel multiplier (UNPU PE): n cycles to produce a full product
+    (one weight bit per cycle into an AND-array + shift-accumulate);
+  * adder trees are pipelined, 1 cycle per level (ceil(log2 K^2) +
+    ceil(log2 N) levels);
+  * NO cross-layer digit overlap: a fused level cannot start until the
+    previous level's tile is fully computed and buffered, so the n-cycle
+    serial phase is paid per level (this is the structural disadvantage the
+    paper attributes to conventional arithmetic: it "fails to process the
+    generated data immediately");
+  * per-level tile buffering costs one extra pass of the level's output
+    region through the activation buffer (R_l cycles, bandwidth 1 row/cycle).
+Temporal baselines re-use one multiplier per window: K*K * (n + acc) cycles.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from .fusion import FusionPlan, FusionSpec, plan_fusion, tile_sizes
+
+
+def _log2c(x: int) -> int:
+    return math.ceil(math.log2(x)) if x > 1 else 0
+
+
+@dataclass(frozen=True)
+class ArithParams:
+    """Arithmetic/unit parameters (paper's symbols)."""
+
+    n: int = 8  # input precision (bits)
+    delta_olm: int = 2  # online multiplier delay
+    delta_ola: int = 2  # online adder delay
+    acc: int = 1  # accumulator cycles per add (DS-2, Eq. 4)
+    mp_cycles: int = 2  # cycles per maxpool stage (MP term)
+    freq_mhz: float = 100.0
+
+
+DEFAULT_PARAMS = ArithParams()
+
+
+# ---------------------------------------------------------------------------
+# Proposed designs — Eq. (3) (DS-1 spatial) and Eq. (4) (DS-2 temporal)
+# ---------------------------------------------------------------------------
+
+
+def _levels_with_pools(spec: FusionSpec):
+    """Group conv levels with their trailing pool (for the MP term)."""
+    groups = []
+    for lvl in spec.levels:
+        if lvl.kind == "conv":
+            groups.append([lvl, None])
+        else:
+            if groups and groups[-1][1] is None:
+                groups[-1][1] = lvl
+            else:  # leading pool (not in the paper's configs)
+                groups.append([None, lvl])
+    return groups
+
+
+def ds1_cycles_per_movement(spec: FusionSpec, p: ArithParams = DEFAULT_PARAMS,
+                            *, include_pool: bool = True) -> int:
+    """Per-movement cycles of Eq. (3), without the alpha^2 factor.
+
+    Per conv level q: delta_OLM + delta_OLA*ceil(log2 K_q^2)
+    + delta_OLA*ceil(log2 N_q) + ceil(log2 K_q^2) + ceil(log2 N_q) + MP_q,
+    then a single trailing ``n`` — the digit stream is pipelined across the
+    whole fusion pyramid, so working precision is paid once.
+    """
+    total = 0
+    for conv, pool in _levels_with_pools(spec):
+        if conv is None:
+            total += p.mp_cycles if include_pool else 0
+            continue
+        lk = _log2c(conv.K * conv.K)
+        ln = _log2c(conv.n_in)
+        total += p.delta_olm + p.delta_ola * lk + p.delta_ola * ln + lk + ln
+        if pool is not None and include_pool:
+            total += p.mp_cycles
+    return total + p.n
+
+
+def ds2_cycles_per_movement(spec: FusionSpec, p: ArithParams = DEFAULT_PARAMS,
+                            *, include_pool: bool = True) -> int:
+    """Per-movement cycles of Eq. (4) (temporal design, one OLM per window).
+
+    Per conv level: (delta_OLM + (n-1) + Acc) * K^2  — the single online
+    multiplier is drained K^2 times into the accumulation buffer — plus the
+    channel adder tree terms and MP; single trailing ``n``.
+    """
+    total = 0
+    for conv, pool in _levels_with_pools(spec):
+        if conv is None:
+            total += p.mp_cycles if include_pool else 0
+            continue
+        ln = _log2c(conv.n_in)
+        total += (p.delta_olm + (p.n - 1) + p.acc) * conv.K * conv.K
+        total += p.delta_ola * ln + ln
+        if pool is not None and include_pool:
+            total += p.mp_cycles
+    return total + p.n
+
+
+# ---------------------------------------------------------------------------
+# Baseline models (documented assumptions in module docstring)
+# ---------------------------------------------------------------------------
+
+
+def conv_baseline_spatial_cycles_per_movement(
+    spec: FusionSpec, p: ArithParams = DEFAULT_PARAMS, *, include_pool: bool = True
+) -> int:
+    """Conventional bit-serial, spatial WPU (Fig. 8): n paid per level."""
+    total = 0
+    for conv, pool in _levels_with_pools(spec):
+        if conv is None:
+            total += p.mp_cycles if include_pool else 0
+            continue
+        lk = _log2c(conv.K * conv.K)
+        ln = _log2c(conv.n_in)
+        total += p.n + lk + ln
+        if pool is not None and include_pool:
+            total += p.mp_cycles
+    return total
+
+
+def conv_baseline_temporal_cycles_per_movement(
+    spec: FusionSpec, p: ArithParams = DEFAULT_PARAMS, *, include_pool: bool = True
+) -> int:
+    """Conventional bit-serial, temporal WPU (Fig. 9)."""
+    total = 0
+    for conv, pool in _levels_with_pools(spec):
+        if conv is None:
+            total += p.mp_cycles if include_pool else 0
+            continue
+        ln = _log2c(conv.n_in)
+        total += (p.n + p.acc) * conv.K * conv.K + ln
+        if pool is not None and include_pool:
+            total += p.mp_cycles
+    return total
+
+
+# ---------------------------------------------------------------------------
+# End-to-end duration / performance (Eq. (2))
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DesignResult:
+    name: str
+    cycles: int
+    duration_us: float
+    ops: int
+    gops: float
+    alpha: int
+
+
+_PER_MOVEMENT = {
+    "ds1": ds1_cycles_per_movement,
+    "ds2": ds2_cycles_per_movement,
+    "baseline_spatial": conv_baseline_spatial_cycles_per_movement,
+    "baseline_temporal": conv_baseline_temporal_cycles_per_movement,
+}
+
+
+def naive_alpha(plan: FusionPlan) -> int:
+    """Movements when the tile stride equals the conv stride (Baselines 1-2).
+
+    The fusion tile of the FIRST level advances by that level's conv stride,
+    so the pyramid is evaluated once per first-level output position that the
+    tile plan must cover; this is the paper's "tile stride matching the
+    convolution stride" configuration (massively overlapping tiles).
+    """
+    first = plan.spec.levels[0]
+    lvl = plan.levels[0]
+    span = lvl.ifm - lvl.tile
+    return math.ceil(span / first.S) + 1
+
+
+def evaluate_design(
+    design: str,
+    spec: FusionSpec,
+    plan: FusionPlan,
+    ops: int,
+    p: ArithParams = DEFAULT_PARAMS,
+    *,
+    uniform_stride: bool = True,
+) -> DesignResult:
+    """Duration & performance for a design over a fusion plan (Eq. (2))."""
+    per_mv = _PER_MOVEMENT[design](spec, p)
+    alpha = plan.alpha if uniform_stride else naive_alpha(plan)
+    cycles = alpha * alpha * per_mv
+    dur_us = cycles / p.freq_mhz
+    return DesignResult(
+        name=design,
+        cycles=cycles,
+        duration_us=dur_us,
+        ops=ops,
+        gops=ops / (dur_us * 1e3) if dur_us else float("inf"),
+        alpha=alpha,
+    )
+
+
+def single_layer_result(
+    design: str,
+    spec: FusionSpec,
+    plan: FusionPlan,
+    conv_index: int,
+    ops: int,
+    p: ArithParams = DEFAULT_PARAMS,
+) -> DesignResult:
+    """Per-layer rows of Tables 1-2: one conv level evaluated standalone
+    (no pooling epilogue — validated against the paper's CONV1 rows), still
+    executed with the fusion plan's alpha movements.
+    """
+    convs = [l for l in spec.levels if l.kind == "conv"]
+    conv = convs[conv_index]
+    sub = FusionSpec(levels=(conv,), input_size=spec.input_size)
+    per_mv = _PER_MOVEMENT[design](sub, p, include_pool=False)
+    cycles = plan.alpha * plan.alpha * per_mv
+    dur_us = cycles / p.freq_mhz
+    return DesignResult(
+        name=f"{design}/conv{conv_index + 1}",
+        cycles=cycles,
+        duration_us=dur_us,
+        ops=ops,
+        gops=ops / (dur_us * 1e3) if dur_us else float("inf"),
+        alpha=plan.alpha,
+    )

@@ -1,0 +1,104 @@
+"""Early Negative Detection (END) — paper §3.2, Algorithm 2.
+
+The END unit watches the MSDF digit stream of a SOP headed into a ReLU.  In
+redundant form the prefix after ``j`` digits is ``N_j = sum_k d_k 2**(j-k)``
+(an integer in units of ``2**-j``, equal to ``Z+ - Z-`` of the paper's
+positive/negative bit registers).  The remaining tail can add at most
+``2**-j - 2**-T < 2**-j``, so
+
+    ``N_j <= -1``  (the paper's ``Z+ < Z-`` comparison)
+
+proves the final SOP is strictly negative: the computation is terminated and
+ReLU outputs zero — bit-exact, no accuracy loss (§3.2's claim, verified in
+tests).  Activations that are negative but never trip the test within the
+digit budget are the paper's "undetermined" residue (its Fig. 12 reports
+~2.1-2.4%); they fall through to full-length computation.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit)
+def end_scan(digits: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Run Algorithm 2 over digit streams ``(..., T)``.
+
+    Returns ``(detected, cycle)``: ``detected`` bool — the negative-detect
+    condition fired; ``cycle`` int32 — 1-based digit index at which it fired
+    (== T when it never fired; that stream runs to completion).
+    """
+    T = digits.shape[-1]
+    d = jnp.moveaxis(digits, -1, 0)  # (T, ...)
+
+    def step(carry, dj):
+        n_prefix, det, cyc, j = carry
+        n_prefix = 2 * n_prefix + dj.astype(jnp.int32)
+        hit = (n_prefix <= -1) & (~det)
+        det = det | hit
+        cyc = jnp.where(hit, j, cyc)
+        # clamp the latched prefix so int32 never overflows on long streams
+        n_prefix = jnp.clip(n_prefix, -(2 ** 24), 2 ** 24)
+        return (n_prefix, det, cyc, j + 1), None
+
+    batch = d.shape[1:]
+    carry0 = (
+        jnp.zeros(batch, jnp.int32),
+        jnp.zeros(batch, bool),
+        jnp.full(batch, T, jnp.int32),
+        jnp.int32(1),
+    )
+    (_, det, cyc, _), _ = jax.lax.scan(step, carry0, d)
+    return det, cyc
+
+
+@dataclass(frozen=True)
+class EndStats:
+    """Aggregate END statistics for a batch of SOP streams (Figs. 12-14)."""
+
+    total: int
+    negative: int  # truly negative final SOPs
+    detected: int  # flagged early by Algorithm 2
+    undetermined: int  # negative but never flagged within the digit budget
+    mean_detect_cycle: float  # mean firing digit among detected
+    cycles_no_end: int  # total digit cycles without END
+    cycles_with_end: int  # total digit cycles with END termination
+
+    @property
+    def detected_frac(self) -> float:
+        return self.detected / max(self.total, 1)
+
+    @property
+    def undetermined_frac(self) -> float:
+        return self.undetermined / max(self.total, 1)
+
+    @property
+    def cycle_savings(self) -> float:
+        return 1.0 - self.cycles_with_end / max(self.cycles_no_end, 1)
+
+
+def end_statistics(digits: jnp.ndarray, values: jnp.ndarray) -> EndStats:
+    """Evaluate END over streams with known exact values."""
+    det, cyc = end_scan(digits)
+    det = jax.device_get(det).reshape(-1)
+    cyc = jax.device_get(cyc).reshape(-1)
+    vals = jax.device_get(values).reshape(-1)
+    T = digits.shape[-1]
+    neg = vals < 0
+    undet = neg & ~det
+    total = vals.size
+    eff = cyc.copy()
+    eff[~det] = T
+    return EndStats(
+        total=int(total),
+        negative=int(neg.sum()),
+        detected=int(det.sum()),
+        undetermined=int(undet.sum()),
+        mean_detect_cycle=float(cyc[det].mean()) if det.any() else float(T),
+        cycles_no_end=int(total * T),
+        cycles_with_end=int(eff.sum()),
+    )

@@ -1,0 +1,225 @@
+"""Fused-pyramid executor: value-level JAX execution of a fusion plan.
+
+Demonstrates the paper's layer-fusion dataflow at tensor level: every output
+tile of the fused chain is computed **only from tile-local buffers** (the
+on-chip working set), never from whole intermediate feature maps.  The
+monolithic reference (:func:`reference_forward`) materializes every
+intermediate map; :func:`fused_forward` must match it exactly — this is the
+correctness contract for the fusion-plan math (Eq. (1) windows, lockstep
+movement, edge handling).
+
+Hardware note: USEFUSE *reuses* overlapping tile outputs from on-chip buffers
+("output pixel reuse instead of recompute", §3.4); value-wise reuse and
+recompute are identical, so the executor recomputes halos per tile while the
+intensity/cycle models charge the plan's actual buffer traffic.
+
+Layout: NHWC.  Conv weights: (K, K, Cin, Cout) + bias (Cout,).  Conv levels
+apply ReLU (the paper's pyramids are conv+ReLU[+pool] stacks).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fusion import FusionSpec, LockstepPlan, lockstep_plan
+
+
+@dataclass
+class PyramidParams:
+    """Weights for the conv levels of a fusion spec (index-aligned to convs)."""
+
+    weights: list[jnp.ndarray]
+    biases: list[jnp.ndarray]
+
+
+def init_pyramid_params(
+    spec: FusionSpec, key: jax.Array, scale: float = 1.0
+) -> PyramidParams:
+    ws, bs = [], []
+    for lvl in spec.levels:
+        if lvl.kind != "conv":
+            continue
+        key, k1, k2 = jax.random.split(key, 3)
+        fan_in = lvl.K * lvl.K * lvl.n_in
+        w = jax.random.normal(k1, (lvl.K, lvl.K, lvl.n_in, lvl.n_out)) * (
+            scale * (2.0 / fan_in) ** 0.5
+        )
+        b = jax.random.normal(k2, (lvl.n_out,)) * 0.01
+        ws.append(w.astype(jnp.float32))
+        bs.append(b.astype(jnp.float32))
+    return PyramidParams(ws, bs)
+
+
+def _conv2d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, stride: int,
+            pad: int) -> jnp.ndarray:
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + b
+
+
+def _maxpool(x: jnp.ndarray, k: int, s: int) -> jnp.ndarray:
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, k, k, 1),
+        window_strides=(1, s, s, 1),
+        padding="VALID",
+    )
+
+
+def reference_forward(
+    x: jnp.ndarray, spec: FusionSpec, params: PyramidParams, *, relu: bool = True
+) -> jnp.ndarray:
+    """Layer-by-layer execution with full intermediate maps (the baseline
+    dataflow whose off-chip traffic fusion eliminates)."""
+    ci = 0
+    for lvl in spec.levels:
+        if lvl.kind == "conv":
+            x = _conv2d(x, params.weights[ci], params.biases[ci], lvl.S, lvl.pad)
+            if relu:
+                x = jax.nn.relu(x)
+            ci += 1
+        else:
+            x = _maxpool(x, lvl.K, lvl.S)
+    return x
+
+
+
+
+def fused_forward(
+    x: jnp.ndarray,
+    spec: FusionSpec,
+    params: PyramidParams,
+    plan: LockstepPlan | None = None,
+    *,
+    out_region: int | None = None,
+    relu: bool = True,
+) -> jnp.ndarray:
+    """Execute the fused pyramid tile-by-tile per the lockstep plan.
+
+    The alpha x alpha tile grid covers the final output; each tile's chain is
+    traced back through Eq. (1) windows and computed from tile-local data.
+    """
+    from .fusion import receptive_window
+
+    if plan is None:
+        plan = lockstep_plan(spec, out_region or 1)
+    out_size = spec.feature_sizes()[-1]
+    n_out = spec.levels[-1].n_out if spec.levels[-1].kind != "conv" else (
+        spec.levels[-1].n_out
+    )
+    out = jnp.zeros((x.shape[0], out_size, out_size, n_out), jnp.float32)
+    for si in plan.starts:
+        wins_i = receptive_window(spec, si, plan.out_region)
+        for sj in plan.starts:
+            wins_j = receptive_window(spec, sj, plan.out_region)
+            # first-level slice (row window from si, col window from sj)
+            (lo_i, size_i), (lo_j, size_j) = wins_i[0], wins_j[0]
+            p0 = spec.levels[0].pad
+            ga_i, ga_j = lo_i - p0, lo_j - p0
+            ai, bi = max(ga_i, 0), min(ga_i + size_i, x.shape[1])
+            aj, bj = max(ga_j, 0), min(ga_j + size_j, x.shape[2])
+            tile = x[:, ai:bi, aj:bj, :]
+            tile = jnp.pad(
+                tile,
+                (
+                    (0, 0),
+                    (ai - ga_i, ga_i + size_i - bi),
+                    (aj - ga_j, ga_j + size_j - bj),
+                    (0, 0),
+                ),
+            )
+            tile = _tile_chain_2d(tile, (lo_i, lo_j), spec, params,
+                                  (wins_i, wins_j), relu)
+            out = out.at[:, si : si + plan.out_region, sj : sj + plan.out_region, :].set(
+                tile
+            )
+    return out
+
+
+def _tile_chain_2d(tile, g_pad, spec, params, windows, relu):
+    """Run one tile through the fused chain using only tile-local buffers.
+
+    ``tile`` holds a window of the level-0 *unpadded* input starting at
+    ``g = g_pad - pad_0`` (negative = overlaps the pad border; those rows are
+    zero-filled by the caller).  At each level the requested Eq. (1) window is
+    cut from the local buffer; any deficit is zero — it is exactly this
+    level's padding (interior requests always fit, by construction).  After
+    the level executes, rows outside the level's valid output range are
+    cropped: a deeper level that asks for them receives zeros (its own pad),
+    never values convolved out of thin air.
+    """
+    wins_i, wins_j = windows
+    sizes = spec.feature_sizes()
+    gi = g_pad[0] - spec.levels[0].pad
+    gj = g_pad[1] - spec.levels[0].pad
+    ci = 0
+    for l, lvl in enumerate(spec.levels):
+        (loi_pad, size_i), (loj_pad, size_j) = wins_i[l], wins_j[l]
+        loi, loj = loi_pad - lvl.pad, loj_pad - lvl.pad
+        ai, aj = loi - gi, loj - gj
+        bi, bj = ai + size_i, aj + size_j
+        pli, phi = max(0, -ai), max(0, bi - tile.shape[1])
+        plj, phj = max(0, -aj), max(0, bj - tile.shape[2])
+        if pli or phi or plj or phj:
+            tile = jnp.pad(tile, ((0, 0), (pli, phi), (plj, phj), (0, 0)))
+            ai += pli
+            bi += pli
+            aj += plj
+            bj += plj
+        tile = tile[:, ai:bi, aj:bj, :]
+        if lvl.kind == "conv":
+            tile = _conv2d(tile, params.weights[ci], params.biases[ci], lvl.S, 0)
+            if relu:
+                tile = jax.nn.relu(tile)
+            ci += 1
+        else:
+            tile = _maxpool(tile, lvl.K, lvl.S)
+        gi, gj = loi_pad // lvl.S, loj_pad // lvl.S
+        # crop to the level's valid output range [0, out_size)
+        out_size = sizes[l + 1]
+        ci_lo, cj_lo = max(0, -gi), max(0, -gj)
+        ci_hi = min(tile.shape[1], out_size - gi)
+        cj_hi = min(tile.shape[2], out_size - gj)
+        tile = tile[:, ci_lo:ci_hi, cj_lo:cj_hi, :]
+        gi += ci_lo
+        gj += cj_lo
+    return tile
+
+
+def conv_windows(
+    x: jnp.ndarray, spec: FusionSpec, level: int = 0, max_windows: int | None = None
+) -> tuple[jnp.ndarray, int]:
+    """Extract flattened K*K*N input windows of a conv level (END stats).
+
+    Returns ``(windows, n_windows_per_image)`` with windows shaped
+    ``(B, P, K*K*N)`` where P = number of spatial output positions (possibly
+    subsampled to ``max_windows``).
+    """
+    lvl = spec.levels[level]
+    assert lvl.kind == "conv"
+    xp = jnp.pad(x, ((0, 0), (lvl.pad, lvl.pad), (lvl.pad, lvl.pad), (0, 0)))
+    B, H, W, C = xp.shape
+    out = (H - lvl.K) // lvl.S + 1
+    patches = jax.lax.conv_general_dilated_patches(
+        xp,
+        (lvl.K, lvl.K),
+        (lvl.S, lvl.S),
+        "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # (B, out, out, K*K*C)
+    flat = patches.reshape(B, out * out, -1)
+    if max_windows is not None and flat.shape[1] > max_windows:
+        idx = np.linspace(0, flat.shape[1] - 1, max_windows).astype(int)
+        flat = flat[:, idx, :]
+    return flat, out * out

@@ -1,0 +1,77 @@
+"""Operational-intensity model (paper Figs. 10-11, roofline x-axis).
+
+Off-chip traffic accounting (1 byte/value at n=8-bit precision):
+
+* ``unfused``  — layer-by-layer dataflow: every level reads its input map
+  from off-chip and writes its output map back, plus weights once.
+* ``fused_naive`` — fusion pyramid whose tile stride equals the convolution
+  stride (Baselines 1-2): the first-level tile is re-read per movement with
+  massive overlap: ``alpha_naive^2 * H1^2 * C_in`` input bytes.
+* ``fused_uniform`` — the proposed uniform tile stride (and Baseline-3):
+  ``alpha^2 * H1^2 * C_in`` input bytes — overlap bounded by the planner's
+  maximal-stride selection.
+
+Both fused variants write only the final output map off-chip and load weights
+once (input/output channel tiling, §3.3.1).  Validated against the paper:
+LeNet-5 OI improvement 8.2x reproduces exactly; AlexNet / VGG land at the
+same order (paper's per-network byte accounting is not fully specified; see
+EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .cycle_model import naive_alpha
+from .fusion import FusionPlan, FusionSpec
+
+
+def weight_bytes(spec: FusionSpec, bytes_per_val: int = 1) -> int:
+    return sum(
+        lvl.K * lvl.K * lvl.n_in * lvl.n_out * bytes_per_val
+        for lvl in spec.levels
+        if lvl.kind == "conv"
+    )
+
+
+def unfused_bytes(spec: FusionSpec, bytes_per_val: int = 1) -> int:
+    sizes = spec.feature_sizes()
+    total = 0
+    for l, lvl in enumerate(spec.levels):
+        total += sizes[l] ** 2 * lvl.n_in * bytes_per_val  # read input map
+        total += sizes[l + 1] ** 2 * lvl.n_out * bytes_per_val  # write output
+    return total + weight_bytes(spec, bytes_per_val)
+
+
+def fused_bytes(
+    spec: FusionSpec, plan: FusionPlan, *, uniform: bool = True, bytes_per_val: int = 1
+) -> int:
+    sizes = spec.feature_sizes()
+    h1 = plan.levels[0].tile
+    alpha = plan.alpha if uniform else naive_alpha(plan)
+    in_bytes = alpha * alpha * h1 * h1 * spec.levels[0].n_in * bytes_per_val
+    out_bytes = sizes[-1] ** 2 * spec.levels[-1].n_out * bytes_per_val
+    return in_bytes + out_bytes + weight_bytes(spec, bytes_per_val)
+
+
+@dataclass(frozen=True)
+class IntensityPoint:
+    """One point of the performance-vs-OI plots (Figs. 10-11)."""
+
+    design: str
+    ops: int
+    bytes_offchip: int
+    duration_us: float
+
+    @property
+    def intensity(self) -> float:  # ops / byte
+        return self.ops / self.bytes_offchip
+
+    @property
+    def gops(self) -> float:
+        return self.ops / (self.duration_us * 1e3)
+
+
+def intensity_improvement(spec: FusionSpec, plan: FusionPlan) -> float:
+    """OI(proposed uniform-stride fusion) / OI(naive-stride fusion)."""
+    return fused_bytes(spec, plan, uniform=False) / fused_bytes(spec, plan)

@@ -1,0 +1,195 @@
+"""Online (MSDF) arithmetic over the signed-digit radix-2 set {-1, 0, 1}.
+
+Faithful, vectorized JAX simulation of the paper's compute substrate (§3.1):
+
+* :func:`to_digits` / :func:`from_digits` — SD radix-2 encode/decode.  Values
+  are normalized fractions in (-1, 1); digit ``j`` (0-based) has weight
+  ``2**-(j+1)``, most significant digit first.
+* :func:`online_mul_sp` — Algorithm 1, the serial-parallel online multiplier
+  (serial MSDF input ``x``, parallel constant ``Y``, online delay delta=2).
+* :func:`online_add` — online adder on two digit streams (delta=2).
+* :func:`online_sop` — the WPU: per-window products reduced through a binary
+  tree of online adders, producing the sum-of-products digit stream that the
+  END unit observes (§3.2).
+
+Scaling convention: hardware online adders absorb precision growth by
+emitting extra leading digits (the ``ceil(log2 .)`` growth-cycle terms in
+Eqs. (3)-(4)).  In simulation each adder computes ``(a+b)/2`` so every stream
+stays in (-1, 1); a depth-``d`` tree therefore yields ``sop / 2**d``.  Signs
+(hence END semantics) are unaffected, and the cycle model accounts for the
+growth cycles explicitly.
+
+All recurrences follow the single residual form (derivation in DESIGN.md):
+``v_t = 2*w_{t-1} + (new digit contribution) * 2**-delta``;
+``z_t = SEL(v_t)``; ``w_t = v_t - z_t``;
+with SEL(v) = sign(v) when ``|v| >= 0.5`` else 0, keeping ``|w|`` bounded
+(<= 0.75 for the multiplier, <= 0.5 for the adder) so every output digit is
+in {-1, 0, 1}.  Selection uses the exact residual; hardware truncates to
+t=2 fractional bits, which changes digit choices only within the redundancy
+of the SD representation (same represented value), not END decisions.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+DELTA_OLM = 2  # online delay of the serial-parallel multiplier (paper §3.1.1)
+DELTA_OLA = 2  # online delay of the online adder
+
+
+def _select(v: jnp.ndarray) -> jnp.ndarray:
+    """SELM: output digit in {-1, 0, 1} from the (exact) residual estimate."""
+    return jnp.where(v >= 0.5, 1.0, jnp.where(v <= -0.5, -1.0, 0.0))
+
+
+# ---------------------------------------------------------------------------
+# Encode / decode
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("n",))
+def to_digits(x: jnp.ndarray, n: int) -> jnp.ndarray:
+    """SD radix-2 encode: ``x`` in (-1, 1) -> digits ``(..., n)`` MSDF."""
+
+    def step(w, _):
+        v = 2.0 * w
+        d = _select(v)
+        return v - d, d
+
+    _, digits = jax.lax.scan(step, jnp.asarray(x, jnp.float32), None, length=n)
+    return jnp.moveaxis(digits, 0, -1)
+
+
+def from_digits(d: jnp.ndarray) -> jnp.ndarray:
+    """Decode digit streams ``(..., n)`` back to values."""
+    n = d.shape[-1]
+    weights = 2.0 ** -(jnp.arange(1, n + 1, dtype=jnp.float32))
+    return jnp.sum(d * weights, axis=-1)
+
+
+def prefix_values(d: jnp.ndarray) -> jnp.ndarray:
+    """Running prefix value after each digit: ``(..., n)``."""
+    n = d.shape[-1]
+    weights = 2.0 ** -(jnp.arange(1, n + 1, dtype=jnp.float32))
+    return jnp.cumsum(d * weights, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — serial-parallel online multiplier
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("n_out",))
+def online_mul_sp(x_digits: jnp.ndarray, y: jnp.ndarray, n_out: int) -> jnp.ndarray:
+    """Serial-parallel online multiplication (Algorithm 1).
+
+    ``x_digits``: (..., n) MSDF digit stream of the serial operand.
+    ``y``: (...,) parallel operand, |y| < 1.
+    Returns the product's digit stream ``(..., n_out)``; digit ``j`` of the
+    output is produced at hardware cycle ``j + DELTA_OLM`` (cycle accounting
+    lives in :mod:`repro.core.cycle_model`).
+    """
+    n_in = x_digits.shape[-1]
+    total = n_out + DELTA_OLM
+    xs = jnp.moveaxis(x_digits, -1, 0)  # (n, ...)
+    pad = jnp.zeros((total - n_in,) + xs.shape[1:], xs.dtype)
+    xs = jnp.concatenate([xs, pad], axis=0) if total > n_in else xs[:total]
+    y = jnp.asarray(y, jnp.float32)
+    scale = 2.0 ** -DELTA_OLM
+
+    def step(carry, xt):
+        w, t = carry
+        v = 2.0 * w + xt * y * scale
+        # initialization phase (Algorithm 1 lines 1-5): collect delta digits,
+        # no output selection, w <- v.
+        z = jnp.where(t >= DELTA_OLM, _select(v), 0.0)
+        return (v - z, t + 1), z
+
+    w0 = jnp.zeros(jnp.broadcast_shapes(xs.shape[1:], y.shape), jnp.float32)
+    (_, _), zs = jax.lax.scan(step, (w0, jnp.int32(0)), xs)
+    return jnp.moveaxis(zs[DELTA_OLM:], 0, -1)
+
+
+# ---------------------------------------------------------------------------
+# Online adder
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("scale_half",))
+def online_add(
+    a: jnp.ndarray, b: jnp.ndarray, *, scale_half: bool = True
+) -> jnp.ndarray:
+    """Online addition of two MSDF digit streams (delta = 2).
+
+    With ``scale_half`` (default) computes ``(a + b) / 2`` so the output stays
+    in (-1, 1) — the simulation's stand-in for the hardware's extra leading
+    digit (see module docstring).
+    """
+    n = a.shape[-1]
+    total = n + DELTA_OLA
+    ax = jnp.moveaxis(a, -1, 0)
+    bx = jnp.moveaxis(b, -1, 0)
+    zpad = jnp.zeros((DELTA_OLA,) + ax.shape[1:], ax.dtype)
+    ax = jnp.concatenate([ax, zpad], axis=0)
+    bx = jnp.concatenate([bx, zpad], axis=0)
+    scale = (0.5 if scale_half else 1.0) * 2.0 ** -DELTA_OLA
+
+    def step(carry, ab):
+        w, t = carry
+        at, bt = ab
+        v = 2.0 * w + (at + bt) * scale
+        z = jnp.where(t >= DELTA_OLA, _select(v), 0.0)  # init: no selection
+        return (v - z, t + 1), z
+
+    w0 = jnp.zeros(jnp.broadcast_shapes(ax.shape[1:], bx.shape[1:]), jnp.float32)
+    (_, _), zs = jax.lax.scan(step, (w0, jnp.int32(0)), (ax, bx))
+    return jnp.moveaxis(zs[DELTA_OLA:], 0, -1)
+
+
+# ---------------------------------------------------------------------------
+# WPU: sum-of-products via multiplier bank + online adder tree
+# ---------------------------------------------------------------------------
+
+
+def online_sop(
+    x_digits: jnp.ndarray, y: jnp.ndarray, n_out: int
+) -> tuple[jnp.ndarray, int]:
+    """Window processing unit: SOP of ``m`` serialxparallel products.
+
+    ``x_digits``: (..., m, n) digit streams; ``y``: (..., m) parallel weights.
+    Returns ``(digits, depth)`` where ``digits`` is the (..., n_out) MSDF
+    stream of ``sop / 2**depth`` and ``depth = ceil(log2 m)`` (the adder-tree
+    depth, whose growth cycles Eq. (3) charges explicitly).
+    """
+    prods = online_mul_sp(x_digits, y, n_out)  # (..., m, n_out)
+    streams = [prods[..., i, :] for i in range(prods.shape[-2])]
+    depth = 0
+    while len(streams) > 1:
+        nxt = []
+        for i in range(0, len(streams) - 1, 2):
+            nxt.append(online_add(streams[i], streams[i + 1]))
+        if len(streams) % 2:
+            # odd element passes through scaled by 1/2 to stay aligned
+            nxt.append(online_add(streams[-1], jnp.zeros_like(streams[-1])))
+        streams = nxt
+        depth += 1
+    return streams[0], depth
+
+
+def sop_digits_fast(x: jnp.ndarray, y: jnp.ndarray, n_out: int) -> tuple[jnp.ndarray, int]:
+    """Fast path for large-scale END statistics: digit stream of the exact
+    SOP value, scaled like :func:`online_sop`'s tree output.
+
+    Any valid SD stream of the same value has prefix error <= 2**-j at digit
+    j, so END decisions agree with the composed pipeline to within one digit
+    cycle (asserted in tests/test_online_arith.py).
+    """
+    import math
+
+    m = x.shape[-1]
+    depth = max(1, math.ceil(math.log2(m))) if m > 1 else 0
+    val = jnp.sum(x * y, axis=-1) / (2.0 ** depth)
+    return to_digits(val, n_out), depth

@@ -1,0 +1,224 @@
+"""Pallas TPU kernel: USEFUSE fusion pyramid (conv+ReLU[+pool] x2) in VMEM.
+
+The paper's fused-layer dataflow, adapted to the TPU memory hierarchy
+(DESIGN.md §2): one grid cell computes one fusion-pyramid tile end to end —
+the level-1 intermediate never leaves VMEM (the TPU analogue of "no off-chip
+intermediate traffic").  The grid is the uniform-stride tile plan: the
+``alpha x alpha`` movement grid with identical movement counts at every level
+is exactly Algorithm 4's uniform stride, realized as a Pallas grid.
+
+Per grid cell (b, i, j):
+  * the image block (whole padded image of batch b) is VMEM-resident; the
+    level-0 tile is cut with dynamic slices at ``i*stride0`` (tile stride S^T
+    from the plan);
+  * conv levels run as K*K unrolled strided-slice + MXU dot-general
+    (``(P, Cin) @ (Cin, Cout)``) accumulations — the WPU array of Fig. 5 maps
+    onto MXU tiles;
+  * inner-layer padding is realized by *validity masking*: rows whose global
+    coordinate falls outside a level's valid output range are zeroed — zeros
+    are exactly the next level's pad value, and post-ReLU zeros are neutral
+    for maxpool (the executor's crop logic, branch-free for SIMD);
+  * END tile-skip (the paper's §3.2 insight at TPU-feasible granularity):
+    when the entire level-1 post-ReLU tile is zero, ``@pl.when`` skips the
+    level-2 convolution and emits its closed form ``pool(relu(b2))``; a skip
+    flag per tile is emitted for the energy/cycle statistics.
+
+Weights live whole in VMEM ("filters are loaded into the kernel buffers only
+once", §3.3.1).  VMEM budget: image block (<=227^2*3*4B = 618 KiB) + weights
+(AlexNet fused: <=2.5 MiB) + tiles -- < 4 MiB, comfortably inside 16 MiB/core
+(v5e); asserted in ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+@dataclass(frozen=True)
+class ConvLevelProg:
+    """Static per-conv-level program (offsets are affine in the tile index)."""
+
+    K: int
+    S: int
+    in_size: int  # tile spatial size entering this level
+    out_size: int  # tile spatial size leaving the conv
+    o_base: int  # global output coord of tile row 0 at tile index 0
+    o_step: int  # global output coord step per tile index
+    valid: int  # level's valid output extent (mask range)
+    pool: tuple[int, int] | None  # (K, S) of trailing pool, if any
+    pool_out: int  # tile spatial size after pool (== out_size if no pool)
+    # pool-output masking (pool windows straddling the valid boundary mix
+    # real data into rows the next level expects to be padding)
+    pool_o_base: int = 0
+    pool_o_step: int = 0
+    pool_valid: int = 0
+
+
+def _conv_tile(x, w, b, K: int, S: int, out: int):
+    """Valid conv on a (h, w, Cin) tile via K*K strided-slice MXU dots."""
+    cin, cout = w.shape[2], w.shape[3]
+    acc = jnp.zeros((out * out, cout), jnp.float32)
+    hi = (out - 1) * S + 1
+    for ki in range(K):
+        for kj in range(K):
+            patch = x[ki : ki + hi : S, kj : kj + hi : S, :]
+            acc = acc + jnp.dot(
+                patch.reshape(out * out, cin),
+                w[ki, kj],
+                preferred_element_type=jnp.float32,
+            )
+    return acc.reshape(out, out, cout) + b
+
+
+def _pool_tile(x, K: int, S: int):
+    out = (x.shape[0] - K) // S + 1
+    hi = (out - 1) * S + 1
+    r = None
+    for pi in range(K):
+        for pj in range(K):
+            v = x[pi : pi + hi : S, pj : pj + hi : S, :]
+            r = v if r is None else jnp.maximum(r, v)
+    return r
+
+
+def _mask(t, idx, o_base: int, o_step: int, valid: int):
+    """Zero rows/cols whose global coordinate is outside [0, valid)."""
+    g0 = o_base + idx[0] * o_step
+    g1 = o_base + idx[1] * o_step
+    rows = jnp.arange(t.shape[0])
+    cols = jnp.arange(t.shape[1])
+    mrow = (rows + g0 >= 0) & (rows + g0 < valid)
+    mcol = (cols + g1 >= 0) & (cols + g1 < valid)
+    return t * (mrow[:, None, None] & mcol[None, :, None])
+
+
+def _level_epilogue(t, idx, prog: ConvLevelProg):
+    """Mask conv output to its valid range, pool, mask the pool output."""
+    t = _mask(t, idx, prog.o_base, prog.o_step, prog.valid)
+    if prog.pool is not None:
+        t = _pool_tile(t, *prog.pool)
+        t = _mask(t, idx, prog.pool_o_base, prog.pool_o_step, prog.pool_valid)
+    return t
+
+
+def _fused2_kernel(
+    x_ref,
+    w1_ref,
+    b1_ref,
+    w2_ref,
+    b2_ref,
+    out_ref,
+    skip_ref,
+    *,
+    p1: ConvLevelProg,
+    p2: ConvLevelProg,
+    tile0: int,
+    stride0: int,
+    relu: bool,
+    end_skip: bool,
+):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    idx = (i, j)
+
+    # ---- level-0 tile from the VMEM-resident image block ----
+    x = x_ref[0, pl.ds(i * stride0, tile0), pl.ds(j * stride0, tile0), :]
+
+    # ---- level 1: conv + ReLU (+ pool), masked to valid range ----
+    t1 = _conv_tile(x, w1_ref[...], b1_ref[...], p1.K, p1.S, p1.out_size)
+    if relu:
+        t1 = jnp.maximum(t1, 0.0)
+    t1 = _level_epilogue(t1, idx, p1)
+
+    def level2(t1_in):
+        t2 = _conv_tile(t1_in, w2_ref[...], b2_ref[...], p2.K, p2.S, p2.out_size)
+        if relu:
+            t2 = jnp.maximum(t2, 0.0)
+        return _level_epilogue(t2, idx, p2)
+
+    if end_skip and relu:
+        # END at tile granularity: an all-zero post-ReLU level-1 tile makes
+        # conv2's output the closed form relu(b2) everywhere (then pooled) —
+        # @pl.when skips the K^2 MXU pass entirely on the dead branch.
+        live = jnp.max(t1) > 0.0
+        skip_ref[0, 0, 0] = jnp.where(live, 0, 1).astype(jnp.int32)
+
+        @pl.when(live)
+        def _compute():
+            out_ref[0, :, :, :] = level2(t1)
+
+        @pl.when(jnp.logical_not(live))
+        def _skip():
+            const = jnp.maximum(b2_ref[...], 0.0)
+            const_tile = _level_epilogue(
+                jnp.broadcast_to(
+                    const, (p2.out_size, p2.out_size, const.shape[-1])
+                ),
+                idx,
+                p2,
+            )
+            out_ref[0, :, :, :] = const_tile
+    else:
+        skip_ref[0, 0, 0] = jnp.int32(0)
+        out_ref[0, :, :, :] = level2(t1)
+
+
+def fused_conv2_pallas(
+    x_padded: jnp.ndarray,  # (B, Hp, Wp, C) pre-padded input
+    w1: jnp.ndarray,
+    b1: jnp.ndarray,
+    w2: jnp.ndarray,
+    b2: jnp.ndarray,
+    *,
+    p1: ConvLevelProg,
+    p2: ConvLevelProg,
+    tile0: int,
+    stride0: int,
+    alpha: int,
+    out_region: int,
+    relu: bool = True,
+    end_skip: bool = True,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Launch the fused 2-conv pyramid over the (B, alpha, alpha) grid."""
+    B, Hp, Wp, C = x_padded.shape
+    m2 = w2.shape[-1]
+    kernel = functools.partial(
+        _fused2_kernel,
+        p1=p1,
+        p2=p2,
+        tile0=tile0,
+        stride0=stride0,
+        relu=relu,
+        end_skip=end_skip,
+    )
+    out, skip = pl.pallas_call(
+        kernel,
+        grid=(B, alpha, alpha),
+        in_specs=[
+            pl.BlockSpec((1, Hp, Wp, C), lambda b, i, j: (b, 0, 0, 0)),
+            pl.BlockSpec(w1.shape, lambda b, i, j: (0,) * 4),
+            pl.BlockSpec(b1.shape, lambda b, i, j: (0,)),
+            pl.BlockSpec(w2.shape, lambda b, i, j: (0,) * 4),
+            pl.BlockSpec(b2.shape, lambda b, i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec(
+                (1, out_region, out_region, m2), lambda b, i, j: (b, i, j, 0)
+            ),
+            pl.BlockSpec((1, 1, 1), lambda b, i, j: (b, i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(
+                (B, alpha * out_region, alpha * out_region, m2), jnp.float32
+            ),
+            jax.ShapeDtypeStruct((B, alpha, alpha), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x_padded, w1, b1, w2, b2)
+    return out, skip

@@ -1,0 +1,199 @@
+"""Public wrapper for the fused conv-pyramid Pallas kernel.
+
+Compiles a :class:`~repro.core.fusion.FusionSpec` (exactly two conv levels,
+each with an optional trailing pool) into the kernel's static program:
+
+* tile sizes / window offsets from :func:`receptive_window` (Eq. (1));
+* the uniform tile grid: ``alpha`` movements of stride ``S^T`` per dim —
+  Algorithm 4 realized as the Pallas grid (requires the final output to be
+  exactly tiled by ``out_region``; callers pick a region from the planner);
+* input pre-padding that folds the level-0 conv pad plus any halo the
+  Eq. (1) chain demands at the borders.
+
+Deeper pyramids (e.g. VGG's Q=4 block) chain 2-conv kernel calls — the
+fusion granularity USEFUSE itself deploys on its FPGA (§4.4 fuses Q=2).
+
+A VMEM-budget assert mirrors the paper's "H <= IFM" feasibility bound with
+the TPU's real constraint (DESIGN.md §2 assumption change #2).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fusion import FusionSpec, receptive_window
+from .fused_conv import ConvLevelProg, fused_conv2_pallas
+
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024  # v5e per-core VMEM
+
+
+def _build_programs(spec: FusionSpec, out_region: int):
+    """Static kernel program from the fusion spec + chosen output region."""
+    levels = spec.levels
+    convs = [l for l, lvl in enumerate(levels) if lvl.kind == "conv"]
+    assert len(convs) == 2, "kernel fuses exactly 2 conv levels"
+    sizes = spec.feature_sizes()
+    out_size = sizes[-1]
+    assert out_size % out_region == 0, (
+        f"out_region {out_region} must tile the {out_size} output exactly"
+    )
+    alpha = out_size // out_region
+
+    wins0 = [w for w, _ in zip(receptive_window(spec, 0, out_region), levels)]
+    wins1 = receptive_window(spec, out_region, out_region)
+    win_sizes = [w[1] for w in receptive_window(spec, 0, out_region)]
+
+    progs = []
+    for ci, l in enumerate(convs):
+        lvl = levels[l]
+        in_size = win_sizes[l]
+        out_sz = (in_size - lvl.K) // lvl.S + 1
+        o_base = wins0[l][0] // lvl.S  # output coord of tile row 0, tile 0
+        o_step = (wins1[l][0] - wins0[l][0]) // lvl.S
+        pool = None
+        pool_out = out_sz
+        pool_ob = pool_os = pool_valid = 0
+        if l + 1 < len(levels) and levels[l + 1].kind == "pool":
+            pk, ps = levels[l + 1].K, levels[l + 1].S
+            pool = (pk, ps)
+            pool_out = (out_sz - pk) // ps + 1
+            pool_ob = wins0[l + 1][0] // ps
+            pool_os = (wins1[l + 1][0] - wins0[l + 1][0]) // ps
+            pool_valid = sizes[l + 2]
+        progs.append(
+            ConvLevelProg(
+                K=lvl.K,
+                S=lvl.S,
+                in_size=in_size,
+                out_size=out_sz,
+                o_base=o_base,
+                o_step=o_step,
+                valid=sizes[l + 1],
+                pool=pool,
+                pool_out=pool_out,
+                pool_o_base=pool_ob,
+                pool_o_step=pool_os,
+                pool_valid=pool_valid,
+            )
+        )
+
+    tile0 = win_sizes[0]
+    lo0 = wins0[0][0] - levels[0].pad  # unpadded coords, typically negative
+    stride0 = wins1[0][0] - wins0[0][0]
+    # left pad so tile 0 starts at array index 0; right pad so the last tile fits
+    pad_lo = -lo0
+    last_end = lo0 + (alpha - 1) * stride0 + tile0
+    pad_hi = max(0, last_end - spec.input_size)
+    return progs, tile0, stride0, alpha, pad_lo, pad_hi
+
+
+def fused_pyramid_chain(
+    x: jnp.ndarray,
+    weights: list,
+    biases: list,
+    *,
+    spec: FusionSpec,
+    out_regions: list[int] | None = None,
+    relu: bool = True,
+    end_skip: bool = True,
+    interpret: bool = True,
+):
+    """Q>2 fusion (the paper's §4 VGG Q=4 experiment): consecutive 2-conv
+    chunks each run as one fused kernel; only chunk boundaries touch HBM —
+    the deployment granularity USEFUSE itself uses on its FPGA (Q=2 per
+    pyramid, pyramids chained).
+
+    Returns (y, [skip maps per chunk]).
+    """
+    # split the level chain into chunks of 2 convs (+ their trailing pools)
+    chunks: list[list] = [[]]
+    convs_in_chunk = 0
+    for lvl in spec.levels:
+        if lvl.kind == "conv":
+            if convs_in_chunk == 2:
+                chunks.append([])
+                convs_in_chunk = 0
+            convs_in_chunk += 1
+        chunks[-1].append(lvl)
+    assert all(sum(l.kind == "conv" for l in ch) == 2 for ch in chunks), (
+        "chain requires an even conv count; pad with identity or use the"
+        " executor for odd Q"
+    )
+    y = x
+    size = spec.input_size
+    skips = []
+    wi = 0
+    for ci, ch in enumerate(chunks):
+        sub = FusionSpec(levels=tuple(ch), input_size=size)
+        region = (
+            out_regions[ci]
+            if out_regions is not None
+            else sub.feature_sizes()[-1]
+        )
+        y, skip = fused_conv2(
+            y, weights[wi], biases[wi], weights[wi + 1], biases[wi + 1],
+            spec=sub, out_region=region, relu=relu, end_skip=end_skip,
+            interpret=interpret,
+        )
+        skips.append(skip)
+        size = sub.feature_sizes()[-1]
+        wi += 2
+    return y, skips
+
+
+@partial(
+    jax.jit,
+    static_argnames=("spec", "out_region", "relu", "end_skip", "interpret"),
+)
+def fused_conv2(
+    x: jnp.ndarray,
+    w1: jnp.ndarray,
+    b1: jnp.ndarray,
+    w2: jnp.ndarray,
+    b2: jnp.ndarray,
+    *,
+    spec: FusionSpec,
+    out_region: int,
+    relu: bool = True,
+    end_skip: bool = True,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused 2-conv pyramid forward.  Returns (output map, skip map).
+
+    ``x``: (B, H, W, C) NHWC; weights (K, K, Cin, Cout), biases (Cout,).
+    ``skip``: (B, alpha, alpha) int32 — 1 where END tile-skip fired.
+    """
+    (p1, p2), tile0, stride0, alpha, pad_lo, pad_hi = _build_programs(
+        spec, out_region
+    )
+    xp = jnp.pad(
+        x.astype(jnp.float32),
+        ((0, 0), (pad_lo, pad_hi), (pad_lo, pad_hi), (0, 0)),
+    )
+    vmem = (
+        xp.shape[1] * xp.shape[2] * xp.shape[3]
+        + w1.size + b1.size + w2.size + b2.size
+        + tile0 * tile0 * xp.shape[3]
+        + p1.out_size ** 2 * w1.shape[-1]
+        + p2.out_size ** 2 * w2.shape[-1]
+    ) * 4
+    assert vmem < VMEM_BUDGET_BYTES, f"working set {vmem} exceeds VMEM"
+    return fused_conv2_pallas(
+        xp,
+        w1.astype(jnp.float32),
+        b1.astype(jnp.float32),
+        w2.astype(jnp.float32),
+        b2.astype(jnp.float32),
+        p1=p1,
+        p2=p2,
+        tile0=tile0,
+        stride0=stride0,
+        alpha=alpha,
+        out_region=out_region,
+        relu=relu,
+        end_skip=end_skip,
+        interpret=interpret,
+    )

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the fused 2-conv pyramid kernel: the monolithic
+layer-by-layer execution from :mod:`repro.core.executor`."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.executor import PyramidParams, reference_forward
+from repro.core.fusion import FusionSpec
+
+
+def fused_conv2_ref(
+    x: jnp.ndarray,
+    spec: FusionSpec,
+    w1: jnp.ndarray,
+    b1: jnp.ndarray,
+    w2: jnp.ndarray,
+    b2: jnp.ndarray,
+    *,
+    relu: bool = True,
+) -> jnp.ndarray:
+    params = PyramidParams(weights=[w1, w2], biases=[b1, b2])
+    return reference_forward(x, spec, params, relu=relu)

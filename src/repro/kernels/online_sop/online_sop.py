@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: digit-serial MSDF sum-of-products with END.
+
+The window-processing unit (WPU, paper §3.1.1/§3.2) as a TPU kernel: each
+grid cell holds a (BLOCK_P, m) tile of SOP problems in VMEM and runs the
+digit-serial recurrence over ``n_digits`` cycles with a ``fori_loop``:
+
+  * SD radix-2 digit generation for every serial operand (the residual
+    recurrence of Algorithm 1's serial side, vectorized across the tile);
+  * MSDF prefix accumulation of the SOP: ``P_j = P_{j-1} + 2**-j (d_j . y)``;
+  * END (Algorithm 2): latch the first cycle where the prefix is provably
+    negative, ``P_j <= -2**-j * sum|y|``.
+
+TPU adaptation notes (DESIGN.md §2): lanes cannot retire early on a TPU, so
+END here *records* the termination cycle per problem (the quantity the
+paper's energy/cycle results are built from) rather than gating the loop; the
+block-granular compute skip lives in the fused_conv kernel.  The digit loop
+maps to VPU element-ops on (BLOCK_P, m) tiles resident in VMEM; the final
+full-precision SOP uses one MXU dot per tile.
+
+BLOCK_P is sized so the working set (x tile, residuals, prefix, y) fits VMEM:
+(BLOCK_P=256, m<=1024) * 4 B * ~4 arrays ≈ 4 MiB < 16 MiB/core (v5e).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_P = 256
+
+
+def _sop_end_kernel(x_ref, y_ref, sop_ref, cyc_ref, det_ref, *, n_digits: int):
+    x = x_ref[...]  # (BLOCK_P, m) serial operands, |x| < 1
+    y = y_ref[...]  # (1, m) parallel operand (kernel weights)
+    tail_scale = jnp.sum(jnp.abs(y))
+
+    def cycle(j, carry):
+        w, prefix, det, cyc = carry
+        # --- SD radix-2 digit generation (Algorithm 1 serial side) ---
+        v = 2.0 * w
+        d = jnp.where(v >= 0.5, 1.0, jnp.where(v <= -0.5, -1.0, 0.0))
+        w = v - d
+        # --- MSDF SOP prefix accumulation ---
+        scale = 2.0 ** -(j + 1).astype(jnp.float32)
+        prefix = prefix + scale * jnp.sum(d * y, axis=-1)
+        # --- END (Algorithm 2): provably-negative latch ---
+        hit = (prefix + scale * tail_scale <= 0.0) & (~det)
+        cyc = jnp.where(hit, j + 1, cyc)
+        det = det | hit
+        return w, prefix, det, cyc
+
+    w0 = x.astype(jnp.float32)
+    p0 = jnp.zeros((x.shape[0],), jnp.float32)
+    d0 = jnp.zeros((x.shape[0],), bool)
+    c0 = jnp.full((x.shape[0],), n_digits, jnp.int32)
+    _, _, det, cyc = jax.lax.fori_loop(0, n_digits, cycle, (w0, p0, d0, c0))
+
+    # full-precision SOP on the MXU (the value a non-terminated WPU emits)
+    sop_ref[...] = jnp.sum(x * y, axis=-1, keepdims=True)
+    cyc_ref[...] = cyc[:, None]
+    det_ref[...] = det[:, None].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_digits", "interpret"))
+def online_sop_end_pallas(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    n_digits: int = 16,
+    *,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(P, m), (m,) -> (sop (P,), term_cycle (P,), detected (P,)).
+
+    P is padded to a BLOCK_P multiple; m rides whole in the lane dimension
+    (pad to 128 in the caller for hardware-aligned MXU dots — ops.py does).
+    """
+    P, m = x.shape
+    pad = (-P) % BLOCK_P
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    grid = (x.shape[0] // BLOCK_P,)
+    kernel = functools.partial(_sop_end_kernel, n_digits=n_digits)
+    sop, cyc, det = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_P, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_P, 1), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_P, 1), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_P, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((x.shape[0], 1), jnp.float32),
+            jax.ShapeDtypeStruct((x.shape[0], 1), jnp.int32),
+            jax.ShapeDtypeStruct((x.shape[0], 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, y[None, :].astype(jnp.float32))
+    return sop[:P, 0], cyc[:P, 0], det[:P, 0].astype(bool)

@@ -1,0 +1,46 @@
+"""Jit'd public wrapper for the digit-serial SOP + END kernel.
+
+Pads the reduction dimension to a lane multiple (128) for hardware-aligned
+MXU dots, flattens arbitrary batch dims, and dispatches to the Pallas kernel
+(interpret=True on CPU — the TPU target is compiled from the same kernel).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .online_sop import online_sop_end_pallas
+
+LANE = 128
+
+
+@partial(jax.jit, static_argnames=("n_digits", "interpret"))
+def online_sop_end(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    n_digits: int = 16,
+    *,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Digit-serial SOP + END over arbitrary batch dims.
+
+    ``x``: (..., m) serial operands in (-1, 1); ``y``: (m,) parallel weights.
+    Returns (sop (...,), term_cycle (...,), detected (...,)).
+    """
+    batch_shape = x.shape[:-1]
+    m = x.shape[-1]
+    pad_m = (-m) % LANE
+    xf = x.reshape(-1, m).astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    if pad_m:
+        xf = jnp.pad(xf, ((0, 0), (0, pad_m)))
+        yf = jnp.pad(yf, (0, pad_m))
+    sop, cyc, det = online_sop_end_pallas(xf, yf, n_digits, interpret=interpret)
+    return (
+        sop.reshape(batch_shape),
+        cyc.reshape(batch_shape),
+        det.reshape(batch_shape),
+    )

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the digit-serial SOP + END kernel.
+
+Semantics (see kernel docstring): inputs ``x`` (…, m) in (-1, 1) and parallel
+weights ``y`` (m,); the WPU consumes one SD radix-2 digit of every ``x_i`` per
+cycle (MSDF), accumulates the running SOP prefix, and terminates when the
+prefix is provably negative:
+
+    P_j + 2**-j * sum_i |y_i| <= 0
+
+(the remaining digits can contribute at most ``2**-j * sum|y|``).  Outputs:
+the full-precision SOP, the 1-based termination cycle (== T when it never
+fires) and the detected flag.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.online_arith import to_digits
+
+
+@partial(jax.jit, static_argnames=("n_digits",))
+def online_sop_end_ref(
+    x: jnp.ndarray, y: jnp.ndarray, n_digits: int = 16
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Oracle: (sop, term_cycle, detected) for x: (..., m), y: (m,)."""
+    digits = to_digits(x, n_digits)  # (..., m, T)
+    weights = 2.0 ** -(jnp.arange(1, n_digits + 1, dtype=jnp.float32))
+    # prefix_j of the SOP after digit j of every operand
+    contrib = jnp.einsum("...mt,m->...t", digits * weights, y)
+    prefixes = jnp.cumsum(contrib, axis=-1)  # (..., T)
+    tail = weights * jnp.sum(jnp.abs(y))  # 2^-j * sum|y|
+    provably_neg = prefixes + tail <= 0.0
+    detected = jnp.any(provably_neg, axis=-1)
+    term = jnp.argmax(provably_neg, axis=-1) + 1  # first firing cycle
+    term = jnp.where(detected, term, n_digits)
+    sop = x @ y
+    return sop, term.astype(jnp.int32), detected

@@ -1,0 +1,32 @@
+"""Public wrapper for the SSD chunk-scan kernel.
+
+Handles trailing-pad to a uniform chunk grid (causal: pad never leaks
+backward) and exposes the same signature as the pure-JAX
+:func:`repro.models.ssm.ssd_chunked`, so `mamba2_mixer` can swap
+implementations (`use_pallas=True` on TPU; the pure-JAX path remains the
+CPU/autodiff default).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .ssd_scan import ssd_scan_pallas
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B, C, D, *, chunk: int = 64, interpret: bool = True):
+    """SSD over (b,S,H,P); pads S to a chunk multiple internally."""
+    b, S, H, P = x.shape
+    ch = min(chunk, S)
+    pad = (-S) % ch
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    y, state = ssd_scan_pallas(x, dt, A, B, C, D, chunk=ch, interpret=interpret)
+    return y[:, :S], state

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the SSD chunk-scan kernel: the token-by-token
+state-space recurrence (independent of the chunked decomposition)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B, C, D):
+    """Sequential SSM recurrence.
+
+    x: (b,S,H,P); dt: (b,S,H) post-softplus; A: (H,) negative;
+    B/C: (b,S,N); D: (H,).  Returns (y (b,S,H,P), final_state (b,H,P,N)).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+
+    def step(state, t):
+        xt, dtt, Bt, Ct = t
+        dA = jnp.exp(dtt * A[None, :])  # (b,H)
+        xb = xt * dtt[..., None]
+        state = state * dA[..., None, None] + jnp.einsum("bhp,bn->bhpn", xb, Bt)
+        y = jnp.einsum("bhpn,bn->bhp", state, Ct) + xt * D[None, :, None]
+        return state, y
+
+    s0 = jnp.zeros((b, H, P, N), jnp.float32)
+    xs = (
+        x.swapaxes(0, 1),
+        dt.swapaxes(0, 1),
+        B.swapaxes(0, 1),
+        C.swapaxes(0, 1),
+    )
+    final, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1), final

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunk scan with VMEM-carried state.
+
+The framework's USEFUSE-analogue hot loop (DESIGN.md §5): a windowed op
+feeding a recurrent op, fused so chunk intermediates never leave VMEM.  The
+TPU grid iterates chunks **sequentially** (TPU pallas grids are ordered), so
+the inter-chunk SSM state lives in a VMEM scratch buffer that persists
+across grid steps — the hardware analogue of the fusion pyramid's
+activation buffer between levels.
+
+Per grid step (one chunk of Q tokens):
+  * intra-chunk: decay-masked quadratic form  Y_diag = (L ⊙ C Bᵀ) · X̄
+    (MXU dots over (Q, N) x (N, Q) and (Q, Q) x (Q, P));
+  * state in:   Y_off = C · h_in, scaled by the running decay;
+  * state out:  h_out = e^{ΣdA} h_in + (decay-weighted B)ᵀ X̄  — written back
+    to the scratch carry.
+
+Shapes: x (b, S, H, P), dt (b, S, H), A (H,), B/C (b, S, N), D (H,);
+uniform chunk grid (S % Q == 0, the uniform-stride contract).  Block layout
+keeps (Q, N/P) tiles MXU-aligned for N, P in {64, 128}.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, state_ref,
+                *, chunk: int):
+    ci = pl.program_id(0)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0]  # (Q, H, P)
+    dt = dt_ref[0]  # (Q, H)
+    A = a_ref[...]  # (H,)
+    B = b_ref[0]  # (Q, N)
+    C = c_ref[0]  # (Q, N)
+    D = d_ref[...]  # (H,)
+
+    dA = dt * A[None, :]  # (Q, H) negative
+    cums = jnp.cumsum(dA, axis=0)  # (Q, H)
+    xb = x * dt[..., None]  # dt-scaled input
+
+    # ---- intra-chunk: L[q, k, h] = exp(sum dA_{k+1..q}), lower-tri ----
+    seg = cums[:, None, :] - cums[None, :, :]  # (q,k,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), 0)
+    L = jnp.where(tri[:, :, None], jnp.exp(seg), 0.0)  # (q,k,H)
+    scores = jnp.dot(C, B.T, preferred_element_type=jnp.float32)  # (q,k)
+    y_diag = jnp.einsum(
+        "qkh,qk,khp->qhp", L, scores, xb.astype(jnp.float32)
+    )
+
+    # ---- carried state contribution ----
+    h_in = state_ref[...]  # (H, P, N) f32 (batch block of 1 folded in ops)
+    decay_in = jnp.exp(cums)  # (Q, H)
+    y_off = jnp.einsum("qn,hpn,qh->qhp", C.astype(jnp.float32), h_in, decay_in)
+
+    y_ref[0] = (y_diag + y_off + x.astype(jnp.float32) * D[None, :, None]).astype(
+        y_ref.dtype
+    )
+
+    # ---- state update ----
+    decay_out = jnp.exp(cums[-1:, :] - cums)  # (Q, H)
+    h_new = h_in * jnp.exp(cums[-1])[:, None, None] + jnp.einsum(
+        "qn,qh,qhp->hpn", B.astype(jnp.float32), decay_out,
+        xb.astype(jnp.float32),
+    )
+    state_ref[...] = h_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(x, dt, A, B, C, D, *, chunk: int = 64,
+                    interpret: bool = True):
+    """(b,S,H,P) SSD scan; vmapped over batch (one sequence per program).
+
+    Returns (y (b,S,H,P), final_state (b,H,P,N)).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    assert S % chunk == 0, "uniform chunk grid"
+    nc = S // chunk
+
+    def one_seq(xs, dts, Bs, Cs):
+        kernel = functools.partial(_ssd_kernel, chunk=chunk)
+        y, state = pl.pallas_call(
+            kernel,
+            grid=(nc,),
+            in_specs=[
+                pl.BlockSpec((1, chunk, H, P), lambda c: (c, 0, 0, 0)),
+                pl.BlockSpec((1, chunk, H), lambda c: (c, 0, 0)),
+                pl.BlockSpec((H,), lambda c: (0,)),
+                pl.BlockSpec((1, chunk, N), lambda c: (c, 0, 0)),
+                pl.BlockSpec((1, chunk, N), lambda c: (c, 0, 0)),
+                pl.BlockSpec((H,), lambda c: (0,)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, chunk, H, P), lambda c: (c, 0, 0, 0)),
+                # state: same block every step -> persists as the carry
+                pl.BlockSpec((H, P, N), lambda c: (0, 0, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((nc, chunk, H, P), x.dtype),
+                jax.ShapeDtypeStruct((H, P, N), jnp.float32),
+            ],
+            interpret=interpret,
+        )(
+            xs.reshape(nc, chunk, H, P),
+            dts.reshape(nc, chunk, H),
+            A,
+            Bs.reshape(nc, chunk, N),
+            Cs.reshape(nc, chunk, N),
+            D,
+        )
+        return y.reshape(S, H, P), state
+
+    y, state = jax.vmap(one_seq)(x, dt, B, C)
+    return y, state

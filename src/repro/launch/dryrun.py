@@ -1,0 +1,265 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST precede any jax-importing module: jax locks
+# the device count on first init, and the dry-run needs 512 placeholder host
+# devices to build the production meshes.  Tests/benches import other
+# modules and correctly see 1 device.
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec  # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config  # noqa: E402
+from repro.configs.shapes import SHAPES, cell_supported  # noqa: E402
+from repro.launch.hloanalysis import analyze_hlo  # noqa: E402
+from repro.launch.mesh import make_production_mesh, chips  # noqa: E402
+from repro.launch.steps import (  # noqa: E402
+    input_specs,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+from repro.models.model import abstract_params, build_param_specs  # noqa: E402
+from repro.models.serving import build_cache_specs  # noqa: E402
+from repro.optim.adamw import AdamWState  # noqa: E402
+from repro.parallel.constraints import mesh_rules  # noqa: E402
+from repro.parallel.sharding import (  # noqa: E402
+    ShardingRules,
+    partition_spec,
+    rules_for,
+    spec_shardings,
+)
+
+HBM_PER_CHIP = 16 * 1024 ** 3  # v5e
+
+# microbatch policy: rows-per-device-per-microbatch (activation-memory
+# control); default 2 rows, HBM-tight archs drop to 1 row (+ bf16 grad
+# accumulation for the 480B MoE).
+TRAIN_ROWS_PER_DEVICE = 2
+TRAIN_OVERRIDES: dict[str, dict] = {
+    "arctic_480b": {"rows": 1, "accum_dtype": "bfloat16"},
+    "whisper_large_v3": {"rows": 1},
+    "minicpm3_4b": {"rows": 1},
+    "qwen2_moe_a2_7b": {"rows": 1},
+    "llama32_vision_11b": {"rows": 1},
+}
+
+
+def _batch_shardings(specs: dict, mesh, rules: ShardingRules):
+    out = {}
+    for k, v in specs.items():
+        if k == "tokens":
+            logical = ("batch",) + (None,) * (len(v.shape) - 1)
+        elif k in ("vision", "frames"):
+            logical = ("batch", None, None)
+        else:
+            logical = (None,) * len(v.shape)
+        out[k] = NamedSharding(mesh, partition_spec(v.shape, logical, mesh, rules))
+    return out
+
+
+def lower_cell(cfg, shape, mesh, *, microbatches: int | None = None,
+               rules_override: dict | None = None,
+               cfg_override: dict | None = None,
+               grad_dtype=None):
+    """Lower + compile one (arch x shape x mesh) cell; return (compiled, meta)."""
+    import dataclasses
+
+    if cfg_override:
+        cfg = dataclasses.replace(cfg, **cfg_override)
+    rules = rules_for(shape.step, long_context=shape.name == "long_500k")
+    if rules_override:
+        rules = rules.override(**rules_override)
+    pspecs = build_param_specs(cfg)
+    p_sh = spec_shardings(pspecs, mesh, rules)
+    params = abstract_params(cfg)
+    scalar = NamedSharding(mesh, PartitionSpec())
+
+    if shape.step == "train":
+        import jax.numpy as jnp
+
+        ov = TRAIN_OVERRIDES.get(cfg.name.replace("-", "_").replace(".", "_"), {})
+        dp = int(mesh.shape.get("data", 1)) * int(mesh.shape.get("pod", 1))
+        rows = ov.get("rows", TRAIN_ROWS_PER_DEVICE)
+        mb = microbatches or max(1, shape.global_batch // (dp * rows))
+        accum = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[
+            ov.get("accum_dtype", "float32")
+        ]
+        step_fn, opt = make_train_step(cfg, microbatches=mb, accum_dtype=accum,
+                                       grad_dtype=grad_dtype)
+        opt_abs = opt.init_abstract(params)
+        opt_sh = AdamWState(
+            step=scalar,
+            mu=spec_shardings(pspecs, mesh, rules),
+            nu=spec_shardings(pspecs, mesh, rules),
+        )
+        batch = input_specs(cfg, shape)
+        b_sh = _batch_shardings(batch, mesh, rules)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(p_sh, opt_sh, b_sh),
+            out_shardings=(p_sh, opt_sh, scalar),
+            donate_argnums=(0, 1),  # params/opt update in place
+        )
+        args = (params, opt_abs, batch)
+    elif shape.step == "prefill":
+        step_fn = make_prefill_step(cfg)
+        batch = input_specs(cfg, shape)
+        b_sh = _batch_shardings(batch, mesh, rules)
+        logits_sh = NamedSharding(
+            mesh,
+            partition_spec(
+                (shape.global_batch, cfg.vocab), ("batch", "vocab"), mesh, rules
+            ),
+        )
+        jitted = jax.jit(step_fn, in_shardings=(p_sh, b_sh), out_shardings=logits_sh)
+        args = (params, batch)
+    else:  # decode
+        step_fn = make_decode_step(cfg)
+        specs = input_specs(cfg, shape)
+        cache_specs = build_cache_specs(cfg, shape.global_batch, shape.seq_len)
+        c_sh = spec_shardings(cache_specs, mesh, rules)
+        tok_sh = NamedSharding(
+            mesh,
+            partition_spec(specs["tokens"].shape, ("batch", None), mesh, rules),
+        )
+        logits_sh = NamedSharding(
+            mesh,
+            partition_spec(
+                (shape.global_batch, cfg.vocab), ("batch", "vocab"), mesh, rules
+            ),
+        )
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(p_sh, tok_sh, c_sh, scalar),
+            out_shardings=(logits_sh, c_sh),
+            donate_argnums=(2,),  # caches update in place
+        )
+        args = (params, specs["tokens"], specs["caches"], specs["cache_index"])
+
+    with mesh_rules(mesh, rules):
+        t0 = time.time()
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    return compiled, {"t_lower_s": round(t_lower, 2), "t_compile_s": round(t_compile, 2)}
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, *, analyze=True):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "chips": chips(mesh),
+        "step": shape.step,
+    }
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    try:
+        compiled, meta = lower_cell(cfg, shape, mesh)
+        rec.update(meta)
+        ma = compiled.memory_analysis()
+        per_dev = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+        }
+        per_dev["total_bytes"] = (
+            per_dev["argument_bytes"] + per_dev["temp_bytes"]
+        )
+        rec["memory"] = per_dev
+        rec["fits_hbm"] = bool(per_dev["total_bytes"] < HBM_PER_CHIP)
+        ca = compiled.cost_analysis()
+        rec["xla_cost_analysis_flops_once_per_loop"] = float(ca.get("flops", 0.0))
+        if analyze:
+            cost = analyze_hlo(compiled.as_text())
+            rec["hlo"] = {
+                "flops_per_device": cost.flops,
+                "collective_bytes_per_device": cost.collective_bytes,
+                "traffic_bytes_per_device": cost.traffic_bytes,
+                "n_collectives": cost.n_collectives,
+                "by_collective": {
+                    k: round(v) for k, v in sorted(
+                        cost.by_collective.items(), key=lambda kv: -kv[1]
+                    )
+                },
+            }
+        rec["status"] = "ok"
+    except Exception as e:  # a failed cell is a bug; record and keep going
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--no-analyze", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16", make_production_mesh(multi_pod=True)))
+
+    out_path = Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    results = []
+    if out_path.exists():
+        results = json.loads(out_path.read_text())
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if r.get("status") in ("ok", "skipped")}
+
+    for mesh_name, mesh in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                key = (arch, shape_name, mesh_name)
+                if key in done:
+                    continue
+                t0 = time.time()
+                rec = run_cell(arch, shape_name, mesh, mesh_name,
+                               analyze=not args.no_analyze)
+                rec["t_total_s"] = round(time.time() - t0, 1)
+                results = [r for r in results
+                           if (r["arch"], r["shape"], r["mesh"]) != key]
+                results.append(rec)
+                out_path.write_text(json.dumps(results, indent=1))
+                mem = rec.get("memory", {}).get("total_bytes", 0) / 2 ** 30
+                print(
+                    f"[{mesh_name}] {arch:20s} {shape_name:12s} "
+                    f"{rec['status']:8s} mem/dev={mem:6.2f}GiB "
+                    f"fits={rec.get('fits_hbm', '-')} t={rec['t_total_s']}s",
+                    flush=True,
+                )
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped (recorded), {n_err} errors")
+    if n_err:
+        for r in results:
+            if r["status"] == "error":
+                print(f"  ERROR {r['arch']} {r['shape']} {r['mesh']}: {r['error']}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimb harness (§Perf): lower a cell under named sharding/config
+variants, re-analyze the roofline terms, and print before/after rows.
+
+Variants are explicit, named experiments so EXPERIMENTS.md can cite them:
+
+  baseline       — the rules the dry-run table used
+  fsdp           — drop tensor parallelism for weights; both mesh axes do
+                   parameter sharding (data-parallel compute, FSDP gathers)
+  sp             — sequence parallelism: residual stream seq-sharded over
+                   'model' between layers (activation stacks shrink 16x)
+  fsdp_sp        — both
+
+Usage: PYTHONPATH=src python -m repro.launch.hillclimb --arch glm4_9b \
+           --shape train_4k --mesh single --variants baseline,fsdp
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.configs.shapes import SHAPES  # noqa: E402
+from repro.launch.dryrun import lower_cell  # noqa: E402
+from repro.launch.hloanalysis import analyze_hlo  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import (  # noqa: E402
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    memory_bytes_per_device,
+    model_flops_per_device,
+)
+
+# each variant: sharding-rule overrides + optional lowering knobs.
+# Iteration log lives in EXPERIMENTS.md §Perf — including refuted variants
+# (e.g. FSDP *without* widening the batch axes turns the model axis into
+# pure replication: 14x more flops/device; refuted and fixed below).
+VARIANTS: dict[str, dict] = {
+    "baseline": {"rules": {}},
+    # FSDP-dominant: DP over BOTH mesh axes (256-way), weights sharded over
+    # both axes, no tensor parallelism.  batch 256 -> 1 row/device, no
+    # microbatching needed.
+    "fsdp": {
+        "rules": {
+            "batch": ("data", "model"),
+            "heads": (), "kv_heads": (), "mlp": (), "experts": (), "lora": (),
+            "embed": ("data", "model"),
+            "vocab": (),
+        },
+        "microbatches": 1,
+    },
+    # sequence parallelism on the residual stream (keeps TP)
+    "sp": {"rules": {"seq": ("model",)}},
+    # fsdp + bf16 gradients before the data-parallel reduce
+    "fsdp_gbf16": {
+        "rules": {
+            "batch": ("data", "model"),
+            "heads": (), "kv_heads": (), "mlp": (), "experts": (), "lora": (),
+            "embed": ("data", "model"),
+            "vocab": (),
+        },
+        "microbatches": 1,
+        "grad_dtype": "bfloat16",
+    },
+    # fsdp + bf16 grads + dots-saveable remat (no recompute re-gathers)
+    "fsdp_gbf16_dots": {
+        "rules": {
+            "batch": ("data", "model"),
+            "heads": (), "kv_heads": (), "mlp": (), "experts": (), "lora": (),
+            "embed": ("data", "model"),
+            "vocab": (),
+        },
+        "microbatches": 1,
+        "grad_dtype": "bfloat16",
+        "cfg": {"remat": "dots"},
+    },
+    # expert parallelism on 'model' + dense/attn weights FSDP + 16-wide DP
+    "ep_fsdp": {
+        "rules": {
+            "heads": (), "kv_heads": (), "mlp": (), "lora": (),
+            "embed": ("data",),
+        },
+    },
+    # 2D expert parallelism: 128 experts over (pod x model)=32 shards of 4,
+    # expert-internal dims over 'data' — tokens move (all-to-all), weights
+    # never gathered whole (the per-layer 58-GB expert AG disappears)
+    "ep2d": {
+        "rules": {
+            "experts": ("pod", "model"),
+            "heads": (), "kv_heads": (), "lora": (),
+            "mlp": ("data",),
+            "embed": ("data",),
+        },
+    },
+}
+
+
+def run_variant(arch: str, shape_name: str, mesh_name: str, variant: str):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod="multi" in mesh_name)
+    v = VARIANTS[variant]
+    t0 = time.time()
+    import jax.numpy as jnp
+
+    gd = {"bfloat16": jnp.bfloat16}.get(v.get("grad_dtype"))
+    compiled, meta = lower_cell(
+        cfg, shape, mesh,
+        rules_override=v["rules"] or None,
+        microbatches=v.get("microbatches"),
+        cfg_override=v.get("cfg"),
+        grad_dtype=gd,
+    )
+    cost = analyze_hlo(compiled.as_text())
+    ma = compiled.memory_analysis()
+    mem_total = ma.argument_size_in_bytes + ma.temp_size_in_bytes
+    compute_s = cost.flops / PEAK_FLOPS
+    memory_s = memory_bytes_per_device(cfg, shape, mesh_name) / HBM_BW
+    coll_s = cost.collective_bytes / ICI_BW
+    mflops = model_flops_per_device(cfg, shape, mesh_name)
+    bound = max(compute_s, memory_s, coll_s)
+    return {
+        "variant": variant,
+        "compute_s": round(compute_s, 4),
+        "memory_s": round(memory_s, 4),
+        "collective_s": round(coll_s, 4),
+        "dominant": max(
+            ("compute", compute_s), ("memory", memory_s), ("collective", coll_s),
+            key=lambda kv: kv[1],
+        )[0],
+        "roofline_frac": round((mflops / PEAK_FLOPS) / max(bound, 1e-12), 4),
+        "hbm_gib": round(mem_total / 2 ** 30, 2),
+        "flops_per_dev": cost.flops,
+        "collective_gb": round(cost.collective_bytes / 1e9, 1),
+        "by_collective": {
+            k: round(v / 1e9, 1)
+            for k, v in sorted(cost.by_collective.items(), key=lambda kv: -kv[1])[:5]
+        },
+        "t_s": round(time.time() - t0, 1),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--variants", default="baseline,fsdp")
+    args = ap.parse_args()
+    mesh_name = "single_pod_16x16" if args.mesh == "single" else "multi_pod_2x16x16"
+    for v in args.variants.split(","):
+        r = run_variant(args.arch, args.shape, mesh_name, v)
+        print(json.dumps({"arch": args.arch, "shape": args.shape,
+                          "mesh": mesh_name, **r}))
+
+
+if __name__ == "__main__":
+    main()

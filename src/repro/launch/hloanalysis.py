@@ -1,0 +1,258 @@
+"""Trip-count-aware analysis of compiled (post-SPMD) HLO text.
+
+XLA's ``cost_analysis()`` visits while-loop bodies ONCE, so for scan-over-
+layers models it under-reports FLOPs by ~n_layers x (verified empirically —
+see EXPERIMENTS.md §Dry-run).  This analyzer parses ``compiled.as_text()``:
+
+* builds the computation call graph (fusion ``calls=``, while
+  ``body=/condition=``, conditional branches);
+* recovers scan trip counts from the loop-condition constant
+  (``compare(iter, constant(N))`` — exact for lax.scan lowering);
+* multiplies per-computation costs by call multiplicity;
+* dot FLOPs: ``2 * prod(result) * prod(lhs contracting dims)``;
+* collective bytes ON WIRE per device (ring model, group size g):
+  all-reduce ``2*S*(g-1)/g``, all-gather ``S*(g-1)/g`` (S = result),
+  reduce-scatter ``S*(g-1)`` (S = result), all-to-all ``S*(g-1)/g``,
+  collective-permute ``S``;
+* HBM-traffic proxy: sum of (result + operand) bytes of top-level ops
+  (each materialized buffer = one write + reads), trip-count aware.
+
+Shapes in post-partitioning HLO are PER-DEVICE, so all outputs are
+per-device quantities — exactly what the roofline terms need.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+# header: unindented, "name (args) -> result {"; args may nest parens, so
+# match only the leading name and check structure cheaply
+_COMP_NAME = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _lhs_shapes_bytes(lhs: str) -> int:
+    """Total bytes of all shapes appearing before the op name (tuples too)."""
+    return sum(_shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(lhs))
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: list[str] = field(default_factory=list)
+    shapes: dict[str, int] = field(default_factory=dict)  # %name -> bytes
+    dims: dict[str, list[int]] = field(default_factory=dict)  # %name -> dims
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    collective_bytes: float = 0.0
+    traffic_bytes: float = 0.0
+    by_collective: dict = field(default_factory=dict)
+    n_collectives: int = 0
+
+
+def _parse_computations(text: str) -> tuple[dict[str, Computation], str]:
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if line.startswith("}"):
+            cur = None
+            continue
+        is_hdr = (
+            not line.startswith((" ", "\t"))
+            and line.rstrip().endswith("{")
+            and "->" in line
+            and "=" not in line.split("->")[0].split("(")[0]
+        )
+        if is_hdr:
+            hdr = _COMP_NAME.match(line)
+            cur = Computation(hdr.group(1))
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if cur is not None and line.strip():
+            cur.lines.append(line)
+            m = _DEF_RE.match(line)
+            if m:
+                name, rhs = m.groups()
+                sm = _SHAPE_RE.match(rhs.lstrip("("))
+                if sm:
+                    cur.shapes[name] = _shape_bytes(sm.group(1), sm.group(2))
+                    cur.dims[name] = [
+                        int(d) for d in sm.group(2).split(",") if d
+                    ]
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> int:
+    consts = [
+        int(m.group(1))
+        for l in cond.lines
+        for m in re.finditer(r"constant\((\d+)\)", l)
+    ]
+    return max(consts) if consts else 1
+
+
+def _multiplicities(comps: dict[str, Computation], entry: str) -> dict[str, float]:
+    mult = {name: 0.0 for name in comps}
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    # BFS in call order; graphs are DAGs in HLO
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps[cname]
+        m = mult[cname]
+        body_text = "\n".join(comp.lines)
+        # fusions / calls
+        for callee in re.findall(r"(?:calls|to_apply)=%?([\w.\-]+)", body_text):
+            if callee in comps:
+                mult[callee] = mult.get(callee, 0.0) + m
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+        # while loops
+        for wm in re.finditer(
+            r"condition=%?([\w.\-]+), body=%?([\w.\-]+)", body_text
+        ):
+            cond, body = wm.groups()
+            trips = _trip_count(comps[cond]) if cond in comps else 1
+            if body in comps:
+                mult[body] = mult.get(body, 0.0) + m * trips
+                if body not in seen:
+                    seen.add(body)
+                    order.append(body)
+        # conditionals: charge the more expensive branch once (max later;
+        # approximation: count each branch once — branches are rare here)
+        for bm in re.finditer(r"(?:true|false)_computation=%?([\w.\-]+)", body_text):
+            callee = bm.group(1)
+            if callee in comps:
+                mult[callee] = mult.get(callee, 0.0) + m
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+    return mult
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps, entry = _parse_computations(text)
+    if entry is None:
+        return HloCost()
+    mult = _multiplicities(comps, entry)
+    # computations reached via calls= are fusion bodies: their internals are
+    # registers/VMEM, only the ROOT result materializes
+    fused = set()
+    for comp in comps.values():
+        for callee in re.findall(
+            r"(?:calls|to_apply)=%?([\w.\-]+)", "\n".join(comp.lines)
+        ):
+            fused.add(callee)
+    cost = HloCost()
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for line in comp.lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            name, rhs = dm.groups()
+            # ---- dot flops ----
+            if " dot(" in rhs or rhs.startswith("dot("):
+                opm = re.search(r"dot\(%?([\w.\-]+)", rhs)
+                cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+                res_elems = 1
+                sm = _SHAPE_RE.match(rhs)
+                if sm:
+                    for d in sm.group(2).split(","):
+                        if d:
+                            res_elems *= int(d)
+                csize = 1
+                if opm and cm and opm.group(1) in comp.dims:
+                    shape = comp.dims[opm.group(1)]
+                    for idx in cm.group(1).split(","):
+                        if idx:
+                            csize *= shape[int(idx)]
+                cost.flops += m * 2.0 * res_elems * csize
+            # ---- collectives ----
+            for kind in _COLLECTIVES:
+                if re.search(rf"(?:^|\s){kind}(?:-start)?\(", rhs):
+                    size = _lhs_shapes_bytes(rhs.split(kind)[0])
+                    g = _group_size(rhs)
+                    wire = _wire_bytes(kind, size, g)
+                    cost.collective_bytes += m * wire
+                    cost.n_collectives += 1
+                    key = f"{kind}(g={g})"
+                    cost.by_collective[key] = (
+                        cost.by_collective.get(key, 0.0) + m * wire
+                    )
+                    break
+            # ---- traffic proxy (materialized results only; debug column —
+            # the roofline memory term is analytic, see roofline.py) ----
+            if cname in fused and not line.lstrip().startswith("ROOT"):
+                continue  # fusion internals never touch HBM
+            opm = re.search(r"[\s)]([a-z][a-z0-9\-_]*)\(", " " + rhs)
+            op = opm.group(1) if opm else ""
+            if op not in ("parameter", "constant", "get-tuple-element", "tuple",
+                          "bitcast", "reshape", "iota", "after-all"):
+                sm = _SHAPE_RE.match(rhs.lstrip("("))
+                if sm:
+                    cost.traffic_bytes += m * _shape_bytes(sm.group(1), sm.group(2))
+    return cost
+
+
+def _group_size(rhs: str) -> int:
+    # iota format: replica_groups=[G,N]<=[...]
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", rhs)
+    if m:
+        return int(m.group(2))
+    # explicit format: replica_groups={{0,1,2,...},{...}}
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", rhs)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _wire_bytes(kind: str, result_bytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if kind == "all-gather":
+        return result_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return result_bytes * (g - 1)
+    if kind == "all-to-all":
+        return result_bytes * (g - 1) / g
+    return float(result_bytes)  # collective-permute

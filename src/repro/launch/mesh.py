@@ -1,0 +1,33 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import and only then builds meshes.
+
+Topology: TPU v5e pods, 256 chips each.  Single pod = (data=16, model=16);
+two pods = (pod=2, data=16, model=16) with the 'pod' axis crossing DCI —
+gradient reduction over 'pod' is the slow-link collective the overlap and
+compression knobs target.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def chips(mesh) -> int:
+    return int(mesh.devices.size)

@@ -1,0 +1,213 @@
+"""Roofline analysis over dry-run records (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, three per-chip time terms on TPU v5e:
+
+  compute    = HLO_FLOPs_per_device / 197e12        (bf16 MXU peak)
+  memory     = analytic_HBM_bytes_per_device / 819e9
+  collective = HLO_collective_wire_bytes_per_device / 50e9  (ICI per link)
+
+HLO FLOPs / collective bytes come from the trip-count-aware analyzer
+(:mod:`repro.launch.hloanalysis`) over the compiled per-device module.
+
+The memory term is ANALYTIC (the CPU backend's fusion/buffer layout is not
+TPU's, so HLO byte-scans mislead — DESIGN.md §7):
+
+  train:   params(2 reads: fwd+bwd) + grad write+read + moments r/w +
+           param write + residual-stack write+read+recompute-read
+           (3 x L x local x-bytes x microbatches)
+  prefill: params read + 2 x L x local activation bytes
+  decode:  params read (streamed per token) + KV/state cache read + write
+
+MODEL_FLOPS = 6*N*D for train (N = active params for MoE), 2*N*D prefill,
+2*N per token decode (D = tokens); attention excluded by convention — the
+ratio MODEL_FLOPS/HLO_FLOPs therefore shows remat + attention + dispatch
+overhead explicitly.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+_MOMENT_BYTES = {"float32": 4, "bfloat16": 2}
+
+
+def _dp_shards(mesh_name: str) -> int:
+    return 32 if "multi" in mesh_name else 16
+
+
+def _chips(mesh_name: str) -> int:
+    return 512 if "multi" in mesh_name else 256
+
+
+def model_flops_per_device(cfg, shape, mesh_name: str) -> float:
+    n_active = cfg.active_param_count()
+    chips = _chips(mesh_name)
+    if shape.step == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * d / chips
+    if shape.step == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * d / chips
+    return 2.0 * n_active * shape.global_batch / chips  # decode: per step
+
+
+def _cache_bytes(cfg, shape) -> float:
+    """Global KV/state cache bytes for a decode shape."""
+    B, S = shape.global_batch, shape.seq_len
+    bpe = 2  # bf16
+    L = cfg.n_layers
+    if cfg.family == "ssm":
+        conv = (cfg.ssm_conv - 1) * (cfg.d_inner + 2 * cfg.ssm_state)
+        state = cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state
+        return L * B * (conv + state) * bpe
+    if cfg.family == "hybrid":
+        attn = L * B * S * 2 * cfg.n_kv_heads * cfg.d_head * bpe
+        conv = (cfg.ssm_conv - 1) * (cfg.d_inner + 2 * cfg.ssm_state)
+        state = cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state
+        return attn + L * B * (conv + state) * bpe
+    if cfg.attn_kind == "mla":
+        return L * B * S * (cfg.kv_lora_rank + cfg.d_rope) * bpe
+    kv = L * B * S * 2 * cfg.n_kv_heads * cfg.d_head * bpe
+    if cfg.kind == "encdec":
+        kv += L * B * cfg.enc_seq * 2 * cfg.n_kv_heads * cfg.d_head * bpe
+    if cfg.family == "vlm":
+        n_cross = cfg.n_layers // cfg.cross_every
+        kv += n_cross * B * cfg.vis_seq * 2 * cfg.n_kv_heads * cfg.d_head * bpe
+    return kv
+
+
+def memory_bytes_per_device(cfg, shape, mesh_name: str, *, microbatches=1) -> float:
+    chips = _chips(mesh_name)
+    p_total = cfg.param_count()
+    p_loc = p_total * 2 / chips  # bf16 shard
+    mom = _MOMENT_BYTES[cfg.moment_dtype]
+    if shape.step == "train":
+        tokens_loc = shape.global_batch * shape.seq_len / _dp_shards(mesh_name)
+        act = 3.0 * cfg.n_layers * tokens_loc * cfg.d_model * 2  # stacks+recompute
+        opt = p_total / chips * (4 + 2 * 2 * mom)  # grads fp32 + moments r/w
+        return 2 * p_loc + p_loc + opt + act
+    if shape.step == "prefill":
+        tokens_loc = shape.global_batch * shape.seq_len / _dp_shards(mesh_name)
+        return p_loc + 2.0 * cfg.n_layers * tokens_loc * cfg.d_model * 2
+    cache = _cache_bytes(cfg, shape) / chips
+    return p_loc + cache  # decode: stream params + read cache
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    status: str
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    model_flops: float = 0.0
+    hlo_flops: float = 0.0
+    useful_ratio: float = 0.0
+    roofline_frac: float = 0.0  # compute / max(all terms): fraction of peak
+    fits: bool | None = None
+    note: str = ""
+
+    def bound(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+_MOVES = {
+    "compute": "cut remat recompute / attention flops (fused kernels, "
+               "policy='dots'), or grow per-chip batch",
+    "memory": "shard or shrink the streamed state (SP residuals, smaller "
+              "moments, ring-buffer window caches)",
+    "collective": "reshard to cheaper collectives (SP reduce-scatter, "
+                  "grad-compression over 'pod', overlap with compute)",
+}
+
+
+def analyze_record(rec: dict) -> RooflineRow:
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    row = RooflineRow(rec["arch"], rec["shape"], rec["mesh"], rec["status"])
+    if rec["status"] != "ok":
+        row.note = rec.get("reason", rec.get("error", ""))
+        return row
+    h = rec["hlo"]
+    row.hlo_flops = h["flops_per_device"]
+    row.compute_s = row.hlo_flops / PEAK_FLOPS
+    mb = 1
+    row.memory_s = memory_bytes_per_device(
+        cfg, shape, rec["mesh"], microbatches=mb
+    ) / HBM_BW
+    row.collective_s = h["collective_bytes_per_device"] / ICI_BW
+    row.model_flops = model_flops_per_device(cfg, shape, rec["mesh"])
+    row.useful_ratio = row.model_flops / max(row.hlo_flops, 1.0)
+    terms = {
+        "compute": row.compute_s,
+        "memory": row.memory_s,
+        "collective": row.collective_s,
+    }
+    row.dominant = max(terms, key=terms.get)
+    # fraction of the compute roofline actually achievable: useful model
+    # flops-time over the binding term
+    row.roofline_frac = (row.model_flops / PEAK_FLOPS) / max(row.bound(), 1e-12)
+    row.fits = rec.get("fits_hbm")
+    return row
+
+
+def load_rows(path: str | Path) -> list[RooflineRow]:
+    recs = json.loads(Path(path).read_text())
+    return [analyze_record(r) for r in recs]
+
+
+def markdown_table(rows: list[RooflineRow]) -> str:
+    hdr = (
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "dominant | MODEL/HLO flops | roofline frac | fits | what moves it |\n"
+        "|---|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        if r.status == "skipped":
+            lines.append(
+                f"| {r.arch} | {r.shape} | {r.mesh} | — | — | — | skipped "
+                f"| — | — | — | {r.note[:60]} |"
+            )
+            continue
+        if r.status == "error":
+            lines.append(
+                f"| {r.arch} | {r.shape} | {r.mesh} | ERR | | | {r.note[:40]} | | | | |"
+            )
+            continue
+        lines.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.compute_s:.4f} | "
+            f"{r.memory_s:.4f} | {r.collective_s:.4f} | **{r.dominant}** | "
+            f"{r.useful_ratio:.2f} | {r.roofline_frac:.3f} | "
+            f"{'y' if r.fits else 'n'} | {_MOVES[r.dominant]} |"
+        )
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun.json")
+    ap.add_argument("--out", default="results/roofline.md")
+    args = ap.parse_args()
+    rows = load_rows(args.results)
+    md = markdown_table(rows)
+    Path(args.out).write_text(md)
+    print(md)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Step builders + abstract input specs for every (arch x shape) cell.
+
+``make_*_step`` return pure functions ready for ``jax.jit``;
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no allocation) for the dry-run and the launchers.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models import model as M
+from repro.models import serving as S
+from repro.optim.adamw import AdamW
+from repro.optim.schedule import warmup_cosine
+
+MOMENT_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+
+
+def make_optimizer(cfg: ArchConfig) -> AdamW:
+    return AdamW(moment_dtype=MOMENT_DTYPES[cfg.moment_dtype])
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig, *, microbatches: int = 1,
+                    accum_dtype=jnp.float32, grad_dtype=None):
+    """``grad_dtype=bf16`` casts gradients before the data-parallel
+    reduction (halves reduce bytes; AdamW upcasts to f32 internally)."""
+    opt = make_optimizer(cfg)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: M.lm_loss(cfg, p, batch)
+            )(params)
+            if grad_dtype is not None:
+                grads = jax.tree.map(lambda g: g.astype(grad_dtype), grads)
+        else:
+            # microbatch gradient accumulation: compute of microbatch i+1
+            # overlaps the (async) reduction tail of microbatch i under XLA's
+            # latency-hiding scheduler.  accum_dtype=bf16 halves the carried
+            # accumulator for HBM-tight giants (arctic); fp32 is the default.
+            def mb(batch_i):
+                return jax.value_and_grad(
+                    lambda p: M.lm_loss(cfg, p, batch_i)
+                )(params)
+
+            split = jax.tree.map(
+                lambda t: t.reshape((microbatches, t.shape[0] // microbatches)
+                                    + t.shape[1:]),
+                batch,
+            )
+
+            def acc(carry, batch_i):
+                loss_i, g_i = mb(batch_i)
+                loss_a, g_a = carry
+                return (
+                    loss_a + loss_i / microbatches,
+                    jax.tree.map(
+                        lambda a, b: a + b.astype(a.dtype) / microbatches, g_a, g_i
+                    ),
+                ), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params
+            )
+            (loss, grads), _ = jax.lax.scan(acc, (0.0, zero_g), split)
+        lr_scale = warmup_cosine(opt_state.step)
+        new_params, new_state = opt.update(grads, opt_state, params, lr_scale)
+        return new_params, new_state, loss
+
+    return train_step, opt
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        hidden, _, _ = M.hidden_forward(
+            cfg,
+            params,
+            batch["tokens"],
+            mode="prefill",
+            chunked=True,
+            vision=batch.get("vision"),
+            frames=batch.get("frames"),
+        )
+        # project ONLY the last position: (B, S, V) logits never materialize
+        return M.logits_fn(cfg, params, hidden[:, -1:, :])[:, 0, :]
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def step(params, tokens, caches, cache_index):
+        return S.decode_step(cfg, params, tokens, caches, cache_index)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+
+def _tok(shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Modality frontends are STUBS per the assignment: vlm gets precomputed
+    patch embeddings, whisper precomputed frame embeddings.
+    """
+    B, Sq = shape.global_batch, shape.seq_len
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if shape.step == "train":
+        specs = {"tokens": _tok((B, Sq + 1))}
+        if cfg.family == "vlm":
+            specs["vision"] = jax.ShapeDtypeStruct((B, cfg.vis_seq, cfg.d_model), dt)
+        if cfg.kind == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model), dt)
+        return specs
+    if shape.step == "prefill":
+        specs = {"tokens": _tok((B, Sq))}
+        if cfg.family == "vlm":
+            specs["vision"] = jax.ShapeDtypeStruct((B, cfg.vis_seq, cfg.d_model), dt)
+        if cfg.kind == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model), dt)
+        return specs
+    # decode: one new token against a seq_len cache
+    return {
+        "tokens": _tok((B, 1)),
+        "caches": S.abstract_caches(cfg, B, Sq),
+        "cache_index": jax.ShapeDtypeStruct((), jnp.int32),
+    }

@@ -1,0 +1,205 @@
+"""Per-family transformer layer bodies.
+
+Every body has the signature ``(cfg, p, x, ctx) -> (x, new_cache, aux)`` where
+``ctx`` is a :class:`LayerCtx` carrying mode (train / prefill / decode),
+caches and auxiliary inputs (vision/encoder states).  Bodies are scanned over
+stacked params by :mod:`repro.models.model`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (
+    gelu_mlp,
+    gqa_attention,
+    layer_norm,
+    mla_attention,
+    rms_norm,
+    swiglu,
+)
+from .moe import moe_ffn
+from .ssm import mamba2_mixer
+
+
+@dataclass
+class LayerCtx:
+    mode: str = "train"  # train | prefill | decode
+    cache_index: Any = None  # scalar position for decode
+    chunked: bool = False  # use flash-chunked attention
+    causal: bool = True
+    window: int = 0  # sliding window for this layer (0 = full)
+    vision: Any = None  # (B, vis_seq, d) stub embeddings (vlm)
+    encoder_out: Any = None  # (B, enc_seq, d) encoder states (encdec)
+
+
+def _norm(cfg, x, p_scale, p_bias=None):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p_scale, p_bias)
+    return rms_norm(x, p_scale)
+
+
+def _ffn(cfg, p, x):
+    if cfg.act == "gelu":
+        return gelu_mlp(x, p["w_in"], p["w_out"])
+    return swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+
+
+def _self_attention(cfg, p, x, ctx: LayerCtx, cache):
+    if cfg.attn_kind == "mla":
+        return mla_attention(
+            p,
+            x,
+            n_heads=cfg.n_heads,
+            q_lora=cfg.q_lora_rank,
+            kv_lora=cfg.kv_lora_rank,
+            d_nope=cfg.d_nope,
+            d_rope=cfg.d_rope,
+            d_v=cfg.d_v,
+            rope_theta=cfg.rope_theta,
+            kv_cache=cache,
+            cache_index=ctx.cache_index,
+            chunked=ctx.chunked,
+            q_chunk=cfg.attn_chunk,
+            kv_chunk=cfg.attn_chunk,
+        )
+    return gqa_attention(
+        p,
+        x,
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        d_head=cfg.d_head,
+        rope_theta=cfg.rope_theta,
+        causal=ctx.causal,
+        window=ctx.window,
+        kv_cache=cache,
+        cache_index=ctx.cache_index,
+        chunked=ctx.chunked,
+        q_chunk=cfg.attn_chunk,
+        kv_chunk=cfg.attn_chunk,
+    )
+
+
+# ---------------------------------------------------------------------------
+# family bodies
+# ---------------------------------------------------------------------------
+
+
+def dense_layer(cfg, p, x, ctx: LayerCtx, cache=None):
+    """Pre-norm dense block (deepseek / glm4 / phi4 / minicpm3 / llama)."""
+    h, new_cache = _self_attention(
+        cfg, p["attn"], _norm(cfg, x, p["attn_norm"], p.get("attn_norm_b")), ctx,
+        cache,
+    )
+    x = x + h
+    x = x + _ffn(cfg, p["ffn"], _norm(cfg, x, p["ffn_norm"], p.get("ffn_norm_b")))
+    return x, new_cache, 0.0
+
+
+def moe_layer(cfg, p, x, ctx: LayerCtx, cache=None):
+    """MoE block: attention + routed experts (+ shared / dense residual)."""
+    h, new_cache = _self_attention(
+        cfg, p["attn"], _norm(cfg, x, p["attn_norm"]), ctx, cache
+    )
+    x = x + h
+    xn = _norm(cfg, x, p["ffn_norm"])
+    tokens = xn.shape[0] * xn.shape[1]
+    groups = max(1, tokens // cfg.moe_group_tokens)
+    moe_out, aux = moe_ffn(
+        p["moe"],
+        xn,
+        n_experts=cfg.n_experts,
+        top_k=cfg.top_k,
+        capacity_factor=cfg.capacity_factor,
+        groups=groups,
+    )
+    y = moe_out
+    if cfg.n_shared_experts:
+        y = y + _ffn(cfg, p["shared"], xn)
+    if cfg.dense_residual:
+        y = y + _ffn(cfg, p["dense"], xn)
+    return x + y, new_cache, aux
+
+
+def ssm_layer(cfg, p, x, ctx: LayerCtx, cache=None):
+    """Mamba-2 block: norm -> mixer -> residual (no separate FFN)."""
+    h, new_cache = mamba2_mixer(
+        p["mixer"],
+        _norm(cfg, x, p["norm"]),
+        n_heads=cfg.ssm_heads,
+        head_dim=cfg.ssm_head_dim,
+        state_dim=cfg.ssm_state,
+        conv_dim=cfg.ssm_conv,
+        chunk=cfg.ssd_chunk,
+        ssm_cache=cache,
+    )
+    return x + h, new_cache, 0.0
+
+
+def hybrid_layer(cfg, p, x, ctx: LayerCtx, cache=None):
+    """Hymba block: attention and mamba heads in parallel, then FFN.
+
+    ``cache`` is a dict with 'attn' and 'ssm' sub-caches (either may be None
+    outside decode).
+    """
+    attn_cache = cache.get("attn") if cache else None
+    ssm_cache = cache.get("ssm") if cache else None
+    xn = _norm(cfg, x, p["attn_norm"])
+    h_attn, new_attn = _self_attention(cfg, p["attn"], xn, ctx, attn_cache)
+    h_ssm, new_ssm = mamba2_mixer(
+        p["mixer"],
+        xn,
+        n_heads=cfg.ssm_heads,
+        head_dim=cfg.ssm_head_dim,
+        state_dim=cfg.ssm_state,
+        conv_dim=cfg.ssm_conv,
+        chunk=cfg.ssd_chunk,
+        ssm_cache=ssm_cache,
+    )
+    x = x + 0.5 * (h_attn + h_ssm)  # parallel-head fusion (mean combine)
+    x = x + _ffn(cfg, p["ffn"], _norm(cfg, x, p["ffn_norm"]))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"attn": new_attn, "ssm": new_ssm}
+    return x, new_cache, 0.0
+
+
+def cross_attn_block(cfg, p, x, kv_src, ctx: LayerCtx, kv_cache=None):
+    """Gated cross-attention (llama-vision) / plain cross-attn (whisper).
+
+    ``kv_src``: (B, S_src, d) keys/values source (vision or encoder states).
+    ``kv_cache``: optional precomputed dict(k=, v=) to skip the projections
+    (decode: projected once per request, reused every step).
+    """
+    xn = _norm(cfg, x, p["norm"], p.get("norm_b"))
+    q = jnp.einsum("bsd,dhk->bshk", xn, p["wq"])
+    if kv_cache is not None:
+        k, v = kv_cache["k"].astype(q.dtype), kv_cache["v"].astype(q.dtype)
+    else:
+        k = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"])
+    from .layers import chunked_attention, dense_attention
+
+    sq, skv = q.shape[1], k.shape[1]
+    if sq > 2048:
+        # long decoder sequences: chunk the cross-attention so the
+        # (B, H, Sq, S_src) score block never materializes whole.  Small
+        # (or prime — llama-vision's 1601) KV sources stay a single block:
+        # a kv_chunk of 1 would stack scan carries catastrophically.
+        qc = 1024 if sq % 1024 == 0 else sq
+        if skv <= 2048:
+            kc = skv
+        else:
+            divisors = [d for d in range(512, 2049) if skv % d == 0]
+            kc = max(divisors) if divisors else skv
+        out = chunked_attention(q, k, v, causal=False, q_chunk=qc, kv_chunk=kc)
+    else:
+        out = dense_attention(q, k, v, causal=False)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if "gate" in p:
+        y = jnp.tanh(p["gate"]) * y
+    return x + y, 0.0

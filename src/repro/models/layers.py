@@ -1,0 +1,377 @@
+"""Transformer building blocks: norms, RoPE, MLPs, GQA / MLA attention.
+
+Pure-functional JAX: every block is ``apply(params, x, ...)`` with params as
+plain dicts.  Parameter *creation* lives in :mod:`repro.models.params` so the
+same specs drive real init (smoke tests) and abstract init (dry-run).
+
+Attention comes in two dataflows:
+
+* :func:`dense_attention` — materialized scores, for short sequences.
+* :func:`chunked_attention` — flash-style online-softmax double scan over
+  query/key chunks; O(chunk^2) live memory at any sequence length.  This is
+  the uniform-stride tiling discipline of the paper applied to attention:
+  a fixed chunk grid with identical chunk counts per scan level (DESIGN.md
+  §5), no ragged tail (sequence lengths are multiples of the chunk).
+
+Sliding-window masking is chunk-aware: chunks entirely outside the window are
+still visited (lax.scan is shape-static) but fully masked; the window cache
+path in serve.py keeps decode sub-quadratic.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * scale + bias
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU MLP: down( silu(x@gate) * (x@up) )."""
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, w_gate))
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", g * u, w_down)
+
+
+def gelu_mlp(x, w_in, w_out):
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, w_in))
+    return jnp.einsum("...f,fd->...d", h, w_out)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(d_head: int, theta: float = 1e4):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (..., S, H, D) with positions (..., S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+
+
+def _expand_kv(k, n_rep: int):
+    """(B, S, Hkv, D) -> (B, S, Hkv*n_rep, D) for GQA."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(
+        b, s, h * n_rep, d
+    )
+
+
+def dense_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset: int | jnp.ndarray = 0):
+    """Materialized attention.  q: (B,Sq,H,D), k/v: (B,Skv,Hkv,D)."""
+    n_rep = q.shape[2] // k.shape[2]
+    k = _expand_kv(k, n_rep)
+    v = _expand_kv(v, n_rep)
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    sq, skv = q.shape[1], k.shape[1]
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def chunked_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    skip_masked_blocks: bool = True,
+):
+    """Flash-style attention: online softmax over a (Q-chunk x KV-chunk) grid.
+
+    Both sequence lengths must be chunk multiples (the uniform-stride
+    contract: every scan level runs the same static trip count).
+
+    ``skip_masked_blocks`` (§Perf hillclimb, confirmed): the q-chunk loop is
+    unrolled so each q-chunk's inner scan visits ONLY its live KV block range
+    — causal skips future blocks (~2x fewer block dots at long S), sliding
+    windows skip both tails (O(window) per q-chunk).  The block range is
+    static per q-chunk, so the saving is visible to the compiled-FLOP
+    roofline, not just a runtime branch.
+    """
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    dv = v.shape[-1]  # may differ from d (MLA: qk 96, v 64)
+    assert sq % q_chunk == 0 and skv % kv_chunk == 0, "uniform chunk grid"
+    n_rep = h // k.shape[2]
+    k = _expand_kv(k, n_rep)
+    v = _expand_kv(v, n_rep)
+    scale = d ** -0.5
+    nq, nk = sq // q_chunk, skv // kv_chunk
+
+    qs = q.reshape(b, nq, q_chunk, h, d).transpose(1, 0, 3, 2, 4)  # (nq,B,H,Cq,D)
+    ks = k.reshape(b, nk, kv_chunk, h, d).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(b, nk, kv_chunk, h, dv).transpose(1, 0, 3, 2, 4)
+    kv_offset = skv - sq  # causal alignment when skv > sq (cache prefixes)
+
+    def run_q_chunk(qc, iq, lo: int, hi: int):
+        """Online softmax for one q-chunk over KV blocks [lo, hi)."""
+
+        def kv_step(carry, ik):
+            # index (not slice) the chunk stacks: no triangular prefix copies
+            acc, m, l = carry
+            kc = jax.lax.dynamic_index_in_dim(ks, ik, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vs, ik, 0, keepdims=False)
+            logits = (
+                jnp.einsum("bhqd,bhkd->bhqk", qc, kc).astype(jnp.float32) * scale
+            )
+            qpos = iq * q_chunk + jnp.arange(q_chunk) + kv_offset
+            kpos = ik * kv_chunk + jnp.arange(kv_chunk)
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            logits = jnp.where(mask[None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vc.dtype), vc
+            ).astype(jnp.float32)
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((b, h, q_chunk, dv), jnp.float32)
+        m0 = jnp.full((b, h, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        # checkpoint per KV block: backward recomputes each block's logits
+        # instead of saving nq*nk score blocks (the flash-attention backward)
+        (acc, m, l), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (acc0, m0, l0), jnp.arange(lo, hi)
+        )
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    if skip_masked_blocks:
+        outs = []
+        for iq in range(nq):
+            hi = nk
+            lo = 0
+            if causal:  # last causally-visible kv block for this q chunk
+                hi = min(nk, (iq * q_chunk + q_chunk - 1 + kv_offset) // kv_chunk + 1)
+            if window:  # first block within the window of the oldest query
+                lo = max(0, (iq * q_chunk + kv_offset - window + 1) // kv_chunk)
+            outs.append(run_q_chunk(qs[iq], iq, lo, hi))
+        out = jnp.stack(outs, axis=0)
+    else:
+
+        def q_step(_, qc_i):
+            qc, iq = qc_i
+            return None, run_q_chunk(qc, iq, 0, nk)
+
+        _, out = jax.lax.scan(jax.checkpoint(q_step), None, (qs, jnp.arange(nq)))
+    # (nq, B, H, Cq, Dv) -> (B, Sq, H, Dv)
+    return out.transpose(1, 0, 3, 2, 4).reshape(b, sq, h, dv)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+
+def gqa_attention(
+    p,
+    x,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    d_head: int,
+    rope_theta: float,
+    causal: bool = True,
+    window: int = 0,
+    positions=None,
+    kv_cache=None,
+    cache_index=None,
+    chunked: bool = False,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+):
+    """Full GQA block: qkv proj + RoPE + attention + out proj.
+
+    ``kv_cache``: optional dict(k=(B,Smax,Hkv,D), v=...) for decode; the new
+    token's k/v are written at ``cache_index`` and attention runs over the
+    whole cache with position masking.
+    Returns (out, new_cache).
+    """
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])  # (B,S,H,Dh)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if positions is None:
+        positions = jnp.arange(s)
+        if cache_index is not None:
+            positions = positions + cache_index
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+
+    if kv_cache is not None:
+        kc = jax.lax.dynamic_update_slice(
+            kv_cache["k"], k.astype(kv_cache["k"].dtype), (0, cache_index, 0, 0)
+        )
+        vc = jax.lax.dynamic_update_slice(
+            kv_cache["v"], v.astype(kv_cache["v"].dtype), (0, cache_index, 0, 0)
+        )
+        new_cache = {"k": kc, "v": vc}
+        # decode: attend over the cache up to cache_index+s
+        skv = kc.shape[1]
+        n_rep = n_heads // n_kv_heads
+        ke = _expand_kv(kc.astype(q.dtype), n_rep)
+        ve = _expand_kv(vc.astype(q.dtype), n_rep)
+        scale = d_head ** -0.5
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, ke).astype(jnp.float32) * scale
+        kpos = jnp.arange(skv)
+        qpos = positions
+        mask = kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, ve)
+    else:
+        new_cache = None
+        if chunked:
+            out = chunked_attention(
+                q, k, v, causal=causal, window=window,
+                q_chunk=q_chunk, kv_chunk=kv_chunk,
+            )
+        else:
+            out = dense_attention(q, k, v, causal=causal, window=window)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, MiniCPM3 / DeepSeek-V2 style)
+# ---------------------------------------------------------------------------
+
+
+def mla_attention(
+    p,
+    x,
+    *,
+    n_heads: int,
+    q_lora: int,
+    kv_lora: int,
+    d_nope: int,
+    d_rope: int,
+    d_v: int,
+    rope_theta: float,
+    kv_cache=None,
+    cache_index=None,
+    chunked: bool = False,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+):
+    """Multi-head latent attention with compressed KV cache.
+
+    The cache stores only the latent ``c_kv`` (kv_lora) and the shared RoPE
+    key (d_rope) per position — the memory win that makes MLA's long-context
+    decode cheap; K/V are re-expanded per chunk at compute time.
+    Returns (out, new_cache) with cache dict(ckv=(B,S,kv_lora), krope=...).
+    """
+    b, s, d_model = x.shape
+    # --- queries through the low-rank bottleneck ---
+    cq = jnp.einsum("bsd,dr->bsr", x, p["wq_a"])
+    cq = rms_norm(cq, p["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"])  # (B,S,H,d_nope+d_rope)
+    q_nope, q_rope = q[..., :d_nope], q[..., d_nope:]
+    # --- compressed kv + shared rope key ---
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])  # (B,S,kv_lora)
+    ckv = rms_norm(ckv, p["kv_norm"])
+    krope = jnp.einsum("bsd,dk->bsk", x, p["wk_rope"])  # (B,S,d_rope)
+
+    positions = jnp.arange(s) + (cache_index if cache_index is not None else 0)
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+    krope = apply_rope(krope[:, :, None, :], positions, rope_theta)[:, :, 0]
+
+    if kv_cache is not None:
+        ckv_c = jax.lax.dynamic_update_slice(
+            kv_cache["ckv"], ckv.astype(kv_cache["ckv"].dtype), (0, cache_index, 0)
+        )
+        kr_c = jax.lax.dynamic_update_slice(
+            kv_cache["krope"], krope.astype(kv_cache["krope"].dtype),
+            (0, cache_index, 0),
+        )
+        new_cache = {"ckv": ckv_c, "krope": kr_c}
+        ckv_full, krope_full = ckv_c.astype(x.dtype), kr_c.astype(x.dtype)
+    else:
+        new_cache = None
+        ckv_full, krope_full = ckv, krope
+
+    # expand latent to per-head K/V
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv_full, p["wk_b"])  # (B,Skv,H,d_nope)
+    vfull = jnp.einsum("bsr,rhk->bshk", ckv_full, p["wv_b"])  # (B,Skv,H,d_v)
+    kr = jnp.broadcast_to(
+        krope_full[:, :, None, :],
+        (b, krope_full.shape[1], n_heads, d_rope),
+    )
+    k = jnp.concatenate([k_nope, kr], axis=-1)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    if kv_cache is not None:
+        skv = k.shape[1]
+        scale = (d_nope + d_rope) ** -0.5
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qf, k).astype(jnp.float32) * scale
+        mask = jnp.arange(skv)[None, :] <= positions[:, None]
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, -1).astype(x.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, vfull)
+    elif chunked:
+        out = chunked_attention(
+            qf, k, vfull, causal=True, q_chunk=q_chunk, kv_chunk=kv_chunk
+        )
+    else:
+        out = dense_attention(qf, k, vfull, causal=True)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache

@@ -1,0 +1,425 @@
+"""Model assembly: param specs, scan-over-layers forward, loss.
+
+HLO size is O(1) in depth: homogeneous layer stacks are ``lax.scan``-ed over
+stacked parameters (``(L, ...)`` leaves).  Heterogeneous structures keep the
+discipline:
+
+* llama-vision: 8 groups of (4 self layers -> scan) + 1 unrolled gated
+  cross-attn block (pattern: cross every 5th layer);
+* hymba: order-faithful segments — global full-attention layers at
+  (first, middle, last) unrolled, sliding-window segments scanned;
+* whisper: encoder scan + decoder scan (self + cross per layer).
+
+Remat: ``cfg.remat`` wraps the scanned bodies with jax.checkpoint
+(``full`` = nothing saveable, ``dots`` = dot outputs saveable).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import params as prm
+from .blocks import (
+    LayerCtx,
+    cross_attn_block,
+    dense_layer,
+    hybrid_layer,
+    moe_layer,
+    ssm_layer,
+)
+from .layers import layer_norm, rms_norm
+from .params import P, stack_specs
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+def _norm_specs(cfg, name):
+    s = {name: P((cfg.d_model,), (None,), "one")}
+    if cfg.norm == "layernorm":
+        s[name + "_b"] = P((cfg.d_model,), (None,), "zero")
+    return s
+
+
+def _layer_specs(cfg: ArchConfig, *, cross: bool = False) -> dict:
+    """Spec of ONE layer of the main stack (unstacked)."""
+    d = cfg.d_model
+    s: dict = {}
+    if cfg.family == "ssm":
+        s["norm"] = P((d,), (None,), "one")
+        s["mixer"] = prm.mamba_specs(cfg)
+        return s
+    s.update(_norm_specs(cfg, "attn_norm"))
+    s["attn"] = prm.mla_specs(cfg) if cfg.attn_kind == "mla" else prm.gqa_specs(cfg)
+    if cfg.family == "hybrid":
+        s["mixer"] = prm.mamba_specs(cfg)
+    s.update(_norm_specs(cfg, "ffn_norm"))
+    if cfg.family == "moe":
+        s["moe"] = prm.moe_specs(cfg)
+        if cfg.n_shared_experts:
+            s["shared"] = prm.swiglu_specs(d, cfg.d_ff)
+        if cfg.dense_residual:
+            s["dense"] = prm.swiglu_specs(d, cfg.d_ff)
+    else:
+        s["ffn"] = (
+            prm.gelu_mlp_specs(d, cfg.d_ff)
+            if cfg.act == "gelu"
+            else prm.swiglu_specs(d, cfg.d_ff)
+        )
+    return s
+
+
+def _hymba_segments(cfg: ArchConfig):
+    """Order-faithful (kind, count) segments: g = global, s = sliding."""
+    globals_ = sorted(cfg.global_layers)
+    segs, prev = [], 0
+    for g in globals_:
+        if g > prev:
+            segs.append(("s", g - prev))
+        segs.append(("g", 1))
+        prev = g + 1
+    if prev < cfg.n_layers:
+        segs.append(("s", cfg.n_layers - prev))
+    return segs
+
+
+def build_param_specs(cfg: ArchConfig) -> dict:
+    d, V = cfg.d_model, cfg.vocab
+    specs: dict = {
+        "embed": P((V, d), ("vocab", "embed"), 0.02),
+    }
+    specs.update(_norm_specs(cfg, "final_norm"))
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P((d, V), ("embed", "vocab"))
+
+    layer = _layer_specs(cfg)
+    if cfg.family == "vlm":
+        # n_layers total = (cross_every-1) self + 1 gated cross per group
+        # (llama-3.2-vision: 40 = 8 x (4 self + 1 cross))
+        assert cfg.n_layers % cfg.cross_every == 0
+        n_cross = cfg.n_layers // cfg.cross_every
+        self_per_group = cfg.cross_every - 1
+        specs["layers"] = stack_specs(
+            stack_specs(layer, self_per_group, "layers"), n_cross, "layers"
+        )
+        specs["cross"] = stack_specs(prm.cross_attn_specs(cfg), n_cross, "layers")
+    elif cfg.family == "hybrid":
+        n_g = len(cfg.global_layers)
+        specs["global"] = stack_specs(layer, n_g, "layers")
+        specs["sliding"] = stack_specs(layer, cfg.n_layers - n_g, "layers")
+    else:
+        specs["layers"] = stack_specs(layer, cfg.n_layers, "layers")
+
+    if cfg.kind == "encdec":
+        enc_layer = {
+            **_norm_specs(cfg, "attn_norm"),
+            "attn": prm.gqa_specs(cfg),
+            **_norm_specs(cfg, "ffn_norm"),
+            "ffn": prm.gelu_mlp_specs(d, cfg.d_ff),
+        }
+        specs["encoder"] = stack_specs(enc_layer, cfg.enc_layers, "layers")
+        cross = prm.cross_attn_specs(cfg)
+        cross.pop("gate")  # whisper cross-attn is ungated
+        specs["cross"] = stack_specs(cross, cfg.n_layers, "layers")
+        specs.update(_norm_specs(cfg, "enc_final_norm"))
+    return specs
+
+
+def init_params(cfg: ArchConfig, key: jax.Array):
+    return prm.init_tree(build_param_specs(cfg), key, _dtype(cfg))
+
+
+def abstract_params(cfg: ArchConfig):
+    return prm.abstract_tree(build_param_specs(cfg), _dtype(cfg))
+
+
+def param_axes(cfg: ArchConfig):
+    return prm.axes_tree(build_param_specs(cfg))
+
+
+def _dtype(cfg: ArchConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+_BODY = {
+    "dense": dense_layer,
+    "moe": moe_layer,
+    "ssm": ssm_layer,
+    "hybrid": hybrid_layer,
+    "vlm": dense_layer,
+    "audio": dense_layer,
+}
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _scan_stack(cfg, body, x, stacked_params, ctx: LayerCtx, caches=None):
+    """Scan a homogeneous layer stack; caches ride as scanned xs/ys."""
+
+    from repro.parallel.constraints import constrain
+
+    def step(carry, xs):
+        x, aux = carry
+        # pin residual-stream sharding per layer; "seq" maps to () by default
+        # and to ("model",) under sequence parallelism (see §Perf hillclimb)
+        x = constrain(x, "batch", "seq", None)
+        if caches is None:
+            p = xs
+            x, _, a = body(cfg, p, x, ctx, None)
+            return (x, aux + a), None
+        p, cache = xs
+        x, new_cache, a = body(cfg, p, x, ctx, cache)
+        return (x, aux + a), new_cache
+
+    xs = stacked_params if caches is None else (stacked_params, caches)
+    (x, aux), new_caches = jax.lax.scan(_remat(cfg, step), (x, 0.0), xs)
+    return x, aux, new_caches
+
+
+def _decoder_forward(cfg, params, x, ctx: LayerCtx, caches=None):
+    """Run the decoder stack; returns (hidden, aux, new_caches)."""
+    body = _BODY[cfg.family]
+    if cfg.family == "vlm":
+        return _vlm_forward(cfg, params, x, ctx, caches)
+    if cfg.family == "hybrid":
+        return _hymba_forward(cfg, params, x, ctx, caches)
+    if cfg.kind == "encdec":
+        return _whisper_decoder(cfg, params, x, ctx, caches)
+    return _scan_stack(cfg, body, x, params["layers"], ctx, caches)
+
+
+def _vlm_forward(cfg, params, x, ctx: LayerCtx, caches=None):
+    g = cfg.cross_every
+    n_groups = cfg.n_layers // g
+    aux = 0.0
+    new_self, new_cross = [], []
+    for gi in range(n_groups):
+        grp = jax.tree.map(lambda t: t[gi], params["layers"])
+        cache_g = None
+        if caches is not None:
+            cache_g = jax.tree.map(lambda t: t[gi], caches["self"])
+        x, a, nc = _scan_stack(cfg, dense_layer, x, grp, ctx, cache_g)
+        aux += a
+        new_self.append(nc)
+        cp = jax.tree.map(lambda t: t[gi], params["cross"])
+        cross_cache = (
+            jax.tree.map(lambda t: t[gi], caches["cross"]) if caches else None
+        )
+        x, _ = cross_attn_block(cfg, cp, x, ctx.vision, ctx, cross_cache)
+    new_caches = None
+    if caches is not None:
+        new_caches = {
+            "self": jax.tree.map(lambda *ts: jnp.stack(ts), *new_self),
+            "cross": caches["cross"],  # static per request
+        }
+    return x, aux, new_caches
+
+
+def _hymba_forward(cfg, params, x, ctx: LayerCtx, caches=None):
+    segs = _hymba_segments(cfg)
+    gi = si = 0
+    aux = 0.0
+    new_g, new_s = [], []
+    for kind, count in segs:
+        if kind == "g":
+            p = jax.tree.map(lambda t: t[gi], params["global"])
+            cache = (
+                jax.tree.map(lambda t: t[gi], caches["global"]) if caches else None
+            )
+            gctx = LayerCtx(**{**ctx.__dict__, "window": 0})
+            x, nc, a = hybrid_layer(cfg, p, x, gctx, cache)
+            new_g.append(nc)
+            gi += 1
+        else:
+            sl = jax.tree.map(lambda t: t[si : si + count], params["sliding"])
+            cache = (
+                jax.tree.map(lambda t: t[si : si + count], caches["sliding"])
+                if caches
+                else None
+            )
+            sctx = LayerCtx(**{**ctx.__dict__, "window": cfg.window})
+            x, a, nc = _scan_stack(cfg, hybrid_layer, x, sl, sctx, cache)
+            new_s.append(nc)
+            si += count
+        aux += a if isinstance(a, float) or a is not None else 0.0
+    new_caches = None
+    if caches is not None:
+        new_caches = {
+            "global": jax.tree.map(lambda *ts: jnp.stack(ts), *new_g),
+            "sliding": jax.tree.map(
+                lambda *ts: jnp.concatenate(ts, axis=0), *new_s
+            ),
+        }
+    return x, aux, new_caches
+
+
+def _whisper_encoder(cfg, params, frames):
+    """Encoder over stub frame embeddings (B, enc_seq, d)."""
+    ctx = LayerCtx(mode="train", causal=False)
+    x, _, _ = _scan_stack(cfg, dense_layer, frames, params["encoder"], ctx)
+    return layer_norm(x, params["enc_final_norm"], params["enc_final_norm_b"])
+
+
+def _whisper_decoder(cfg, params, x, ctx: LayerCtx, caches=None):
+    """Decoder: per layer self-attn then cross-attn to encoder states."""
+    from repro.parallel.constraints import constrain
+
+    def step(carry, xs):
+        x, aux = carry
+        x = constrain(x, "batch", "seq", None)  # pin residual sharding
+        if caches is None:
+            p, cp = xs
+            x, _, _ = dense_layer(cfg, p, x, ctx, None)
+            x, _ = cross_attn_block(cfg, cp, x, ctx.encoder_out, ctx, None)
+            return (x, aux), None
+        (p, cp), (cache, ccache) = xs
+        x, nc, _ = dense_layer(cfg, p, x, ctx, cache)
+        x, _ = cross_attn_block(cfg, cp, x, ctx.encoder_out, ctx, ccache)
+        return (x, aux), nc
+
+    xs = (params["layers"], params["cross"])
+    if caches is not None:
+        xs = (xs, (caches["self"], caches["cross"]))
+    (x, aux), new_self = jax.lax.scan(_remat(cfg, step), (x, 0.0), xs)
+    new_caches = None
+    if caches is not None:
+        new_caches = {"self": new_self, "cross": caches["cross"]}
+    return x, aux, new_caches
+
+
+def _final_norm(cfg, params, x):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, params["final_norm"], params["final_norm_b"])
+    return rms_norm(x, params["final_norm"])
+
+
+def logits_fn(cfg, params, x):
+    x = _final_norm(cfg, params, x)
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+
+def forward(
+    cfg: ArchConfig,
+    params,
+    tokens: jnp.ndarray,  # (B, S) int32
+    *,
+    mode: str = "train",
+    chunked: bool | None = None,
+    vision=None,
+    frames=None,
+    caches=None,
+    cache_index=None,
+):
+    """Full forward. Returns (logits, aux, new_caches)."""
+    x = params["embed"][tokens].astype(_dtype(cfg))
+    if chunked is None:
+        chunked = tokens.shape[1] > 2048
+    encoder_out = None
+    if cfg.kind == "encdec" and frames is not None:
+        # decode passes frames=None: cross-attn reads precomputed caches
+        encoder_out = _whisper_encoder(cfg, params, frames)
+    ctx = LayerCtx(
+        mode=mode,
+        cache_index=cache_index,
+        chunked=chunked and caches is None,
+        causal=True,
+        window=0,
+        vision=vision,
+        encoder_out=encoder_out,
+    )
+    x, aux, new_caches = _decoder_forward(cfg, params, x, ctx, caches)
+    return logits_fn(cfg, params, x), aux, new_caches
+
+
+def hidden_forward(cfg, params, tokens, **kw):
+    """Forward returning the pre-head hidden states (B, S, d)."""
+    x = params["embed"][tokens].astype(_dtype(cfg))
+    chunked = kw.pop("chunked", None)
+    if chunked is None:
+        chunked = tokens.shape[1] > 2048
+    encoder_out = None
+    if cfg.kind == "encdec" and kw.get("frames") is not None:
+        encoder_out = _whisper_encoder(cfg, params, kw["frames"])
+    ctx = LayerCtx(
+        mode=kw.get("mode", "train"),
+        cache_index=kw.get("cache_index"),
+        chunked=chunked and kw.get("caches") is None,
+        causal=True,
+        window=0,
+        vision=kw.get("vision"),
+        encoder_out=encoder_out,
+    )
+    x, aux, new_caches = _decoder_forward(cfg, params, x, ctx, kw.get("caches"))
+    return x, aux, new_caches
+
+
+def chunked_ce(cfg, params, hidden, targets, *, chunk: int = 2048):
+    """Memory-safe cross-entropy: logits are never materialized whole.
+
+    Scans over sequence chunks; each chunk projects to (B, C, V), reduces to
+    logsumexp + label logit (one-hot contraction — stays vocab-sharded under
+    SPMD, no gather all-gather), and is immediately freed.  This bounds the
+    logits working set to B*C*V/devices regardless of sequence length.
+    """
+    b, s, d = hidden.shape
+    c = min(chunk, s)
+    while s % c:
+        c -= 1  # largest chunk that tiles s (uniform grid, no ragged tail)
+    nc = s // c
+    hs = hidden.reshape(b, nc, c, d).swapaxes(0, 1)  # (nc, b, c, d)
+    ts = targets.reshape(b, nc, c).swapaxes(0, 1)
+
+    from repro.parallel.constraints import constrain
+
+    def step(acc, xs):
+        h, t = xs
+        h = constrain(h, "batch", None, None)
+        logits = logits_fn(cfg, params, h).astype(jnp.float32)  # (b,c,V)
+        # keep logits batch-sharded x vocab-sharded: without this pin XLA has
+        # been observed to all-reduce batch-replicated logits over fsdp
+        logits = constrain(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        label = jnp.sum(
+            logits * jax.nn.one_hot(t, logits.shape[-1], dtype=jnp.float32),
+            axis=-1,
+        )
+        return acc + jnp.sum(lse - label), None
+
+    total, _ = jax.lax.scan(jax.checkpoint(step), jnp.float32(0.0), (hs, ts))
+    return total / (b * s)
+
+
+def lm_loss(cfg, params, batch, *, aux_weight: float = 0.01):
+    """Next-token CE (+ MoE aux).  batch: dict(tokens, plus stub inputs)."""
+    tokens = batch["tokens"]
+    hidden, aux, _ = hidden_forward(
+        cfg,
+        params,
+        tokens[:, :-1],
+        vision=batch.get("vision"),
+        frames=batch.get("frames"),
+    )
+    loss = chunked_ce(cfg, params, hidden, tokens[:, 1:])
+    if cfg.n_experts:
+        loss = loss + aux_weight * aux / max(cfg.n_layers, 1)
+    return loss

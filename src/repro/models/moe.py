@@ -1,0 +1,108 @@
+"""Mixture-of-Experts: top-k token-choice routing with capacity dispatch.
+
+GShard/MaxText-style dense dispatch: tokens are organized into groups
+(``(G, T_g, d)``; G shards over the data axis), each group dispatches into
+``(E, C)`` expert buffers via one-hot einsums, experts run as a single
+grouped matmul ``(G, E, C, d) x (E, d, f)`` (E shards over the expert axis =
+mesh 'model'), and results combine back with the routing weights.  Dropped
+tokens (over capacity) fall through the residual connection.
+
+Active-FLOPs accounting is exact: G*E*C == tokens * top_k (capacity factor
+1.0), so ``cost_analysis`` FLOPs match 6*N_active*D for the roofline's
+MODEL_FLOPS ratio.
+
+Shared experts (Qwen2-MoE) and a parallel dense residual MLP (Arctic) are
+composed in :mod:`repro.models.blocks`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import swiglu
+
+
+def route_topk(logits: jnp.ndarray, top_k: int):
+    """Top-k routing: returns (expert_idx (..., k), weights (..., k)).
+
+    Weights are the softmax over the selected experts' logits (Mixtral /
+    Qwen2-MoE convention).
+    """
+    vals, idx = jax.lax.top_k(logits, top_k)
+    w = jax.nn.softmax(vals.astype(jnp.float32), axis=-1)
+    return idx, w
+
+
+def dispatch_combine(
+    x: jnp.ndarray,  # (G, T, d) grouped tokens
+    expert_idx: jnp.ndarray,  # (G, T, k)
+    weights: jnp.ndarray,  # (G, T, k)
+    n_experts: int,
+    capacity: int,
+):
+    """Build dispatch/combine tensors with per-expert capacity.
+
+    Position of a token inside its expert buffer = running count of earlier
+    claims on that expert within the group (cumsum trick); claims beyond
+    ``capacity`` are dropped.
+    Returns (dispatched (G, E, C, d), combine (G, T, E, C)).
+    """
+    g, t, k = expert_idx.shape
+    onehot = jax.nn.one_hot(expert_idx, n_experts, dtype=jnp.int32)  # (G,T,k,E)
+    # claims ordered (token0 choice0, token0 choice1, token1 choice0, ...):
+    # capacity is first-come-first-served in token order
+    claims = onehot.reshape(g, t * k, n_experts)
+    pos = (jnp.cumsum(claims, axis=1) - claims).reshape(g, t, k, n_experts)
+    # position of each claim inside ITS chosen expert only — keeps every
+    # materialized tensor at (G,T,k,·); the (G,T,k,E,C) outer product below
+    # is contracted over k by dot_general without materializing.
+    pos_sel = jnp.take_along_axis(pos, expert_idx[..., None], axis=-1)[..., 0]
+    in_cap = (pos_sel < capacity).astype(x.dtype)  # (G,T,k)
+    oh_e = onehot.astype(x.dtype) * in_cap[..., None]  # (G,T,k,E)
+    oh_c = jax.nn.one_hot(pos_sel, capacity, dtype=x.dtype)  # (G,T,k,C)
+    dispatch = jnp.einsum("gtke,gtkc->gtec", oh_e, oh_c)  # (G,T,E,C) 0/1
+    combine = jnp.einsum(
+        "gtke,gtkc->gtec", oh_e, oh_c * weights[..., None].astype(x.dtype)
+    )
+    dispatched = jnp.einsum("gtec,gtd->gecd", dispatch, x)
+    return dispatched, combine
+
+
+def moe_ffn(
+    p: dict,
+    x: jnp.ndarray,  # (B, S, d)
+    *,
+    n_experts: int,
+    top_k: int,
+    capacity_factor: float = 1.0,
+    groups: int = 1,
+    router_dtype=jnp.float32,
+):
+    """Full MoE FFN block.  Returns (y, aux) with load-balance aux loss."""
+    b, s, d = x.shape
+    tokens = b * s
+    assert tokens % groups == 0
+    tg = tokens // groups
+    xg = x.reshape(groups, tg, d)
+
+    logits = jnp.einsum(
+        "gtd,de->gte", xg.astype(router_dtype), p["router"].astype(router_dtype)
+    )
+    idx, w = route_topk(logits, top_k)
+    capacity = max(1, int(tg * top_k * capacity_factor) // n_experts)
+    dispatched, combine = dispatch_combine(xg, idx, w, n_experts, capacity)
+
+    # experts: grouped SwiGLU over (G, E, C, d)
+    gate = jax.nn.silu(jnp.einsum("gecd,edf->gecf", dispatched, p["w_gate"]))
+    up = jnp.einsum("gecd,edf->gecf", dispatched, p["w_up"])
+    h = jnp.einsum("gecf,efd->gecd", gate * up, p["w_down"])
+    y = jnp.einsum("gtec,gecd->gtd", combine, h)
+
+    # load-balance aux (Switch): E * mean(frac_tokens_e * mean_prob_e)
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac = jnp.mean(
+        jax.nn.one_hot(idx[..., 0], n_experts, dtype=jnp.float32), axis=(0, 1)
+    )
+    aux = n_experts * jnp.sum(frac * jnp.mean(probs, axis=(0, 1)))
+    return y.reshape(b, s, d).astype(x.dtype), aux

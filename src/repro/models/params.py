@@ -1,0 +1,173 @@
+"""Parameter specs: one source of truth for shapes, init scales and logical
+sharding axes.
+
+Every leaf is declared as ``P(shape, axes, scale)``; the same tree drives
+
+* real initialization (smoke tests / training) — truncated-normal with
+  fan-in scaling;
+* abstract initialization (dry-run) — ``jax.ShapeDtypeStruct`` only;
+* sharding — the ``axes`` tuple of logical names is resolved against the
+  mesh by :mod:`repro.parallel.sharding`.
+
+Logical axis vocabulary: ``embed, mlp, heads, kv_heads, head, vocab,
+experts, expert_mlp, lora, state, conv, layers`` (None = replicated).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class P:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    scale: float | str = "fan_in"  # "fan_in" | "zero" | "one" | float
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_leaf(key, spec: P, dtype) -> jnp.ndarray:
+    if spec.scale == "zero":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.scale == "one":
+        return jnp.ones(spec.shape, dtype)
+    if spec.scale == "fan_in":
+        fan_in = spec.shape[0] if len(spec.shape) == 1 else int(
+            np.prod(spec.shape[:-1])
+        )
+        std = min(1.0, (1.0 / max(fan_in, 1)) ** 0.5)
+    else:
+        std = float(spec.scale)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, spec.shape) * std).astype(
+        dtype
+    )
+
+
+def init_tree(specs: Any, key: jax.Array, dtype=jnp.bfloat16):
+    """Materialize a spec tree into real parameters."""
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, P)
+    )
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(k, s, dtype) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_tree(specs: Any, dtype=jnp.bfloat16):
+    """Spec tree -> ShapeDtypeStruct tree (no allocation; dry-run)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def axes_tree(specs: Any):
+    """Spec tree -> logical-axes tree (same structure)."""
+    return jax.tree.map(
+        lambda s: s.axes, specs, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def stack_specs(specs: Any, n: int, axis_name: str = "layers"):
+    """Prepend a stacked (scan) dimension to every leaf of a layer spec."""
+    return jax.tree.map(
+        lambda s: P((n,) + s.shape, (axis_name,) + s.axes, s.scale),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Layer spec builders (cfg is an ArchConfig; import-free to avoid cycles)
+# ---------------------------------------------------------------------------
+
+
+def gqa_specs(cfg) -> dict:
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    return {
+        "wq": P((d, H, Dh), ("embed", "heads", None)),
+        "wk": P((d, Hkv, Dh), ("embed", "kv_heads", None)),
+        "wv": P((d, Hkv, Dh), ("embed", "kv_heads", None)),
+        "wo": P((H, Dh, d), ("heads", None, "embed")),
+    }
+
+
+def mla_specs(cfg) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    r_q, r_kv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.d_nope, cfg.d_rope, cfg.d_v
+    return {
+        "wq_a": P((d, r_q), ("embed", "lora")),
+        "q_norm": P((r_q,), (None,), "one"),
+        "wq_b": P((r_q, H, dn + dr), ("lora", "heads", None)),
+        "wkv_a": P((d, r_kv), ("embed", "lora")),
+        "kv_norm": P((r_kv,), (None,), "one"),
+        "wk_rope": P((d, dr), ("embed", None)),
+        "wk_b": P((r_kv, H, dn), ("lora", "heads", None)),
+        "wv_b": P((r_kv, H, dv), ("lora", "heads", None)),
+        "wo": P((H, dv, d), ("heads", None, "embed")),
+    }
+
+
+def swiglu_specs(d: int, f: int) -> dict:
+    return {
+        "w_gate": P((d, f), ("embed", "mlp")),
+        "w_up": P((d, f), ("embed", "mlp")),
+        "w_down": P((f, d), ("mlp", "embed")),
+    }
+
+
+def gelu_mlp_specs(d: int, f: int) -> dict:
+    return {
+        "w_in": P((d, f), ("embed", "mlp")),
+        "w_out": P((f, d), ("mlp", "embed")),
+    }
+
+
+def moe_specs(cfg) -> dict:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    specs = {
+        "router": P((d, E), ("embed", None)),
+        "w_gate": P((E, d, f), ("experts", "embed", None)),
+        "w_up": P((E, d, f), ("experts", "embed", None)),
+        "w_down": P((E, f, d), ("experts", None, "embed")),
+    }
+    return specs
+
+
+def mamba_specs(cfg) -> dict:
+    d = cfg.d_model
+    H, Pd, N, K = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_conv
+    di = H * Pd
+    conv_ch = di + 2 * N
+    return {
+        "w_in": P((d, 2 * di + 2 * N + H), ("embed", "mlp")),
+        "conv_w": P((K, conv_ch), (None, "mlp")),
+        "dt_bias": P((H,), (None,), "zero"),
+        "A_log": P((H,), (None,), 0.5),
+        "D": P((H,), (None,), "one"),
+        "w_out": P((di, d), ("mlp", "embed")),
+    }
+
+
+def cross_attn_specs(cfg) -> dict:
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    s = {
+        "wq": P((d, H, Dh), ("embed", "heads", None)),
+        "wk": P((d, Hkv, Dh), ("embed", "kv_heads", None)),
+        "wv": P((d, Hkv, Dh), ("embed", "kv_heads", None)),
+        "wo": P((H, Dh, d), ("heads", None, "embed")),
+        "gate": P((1,), (None,), "zero"),  # gated cross-attn (llama-vision)
+        "norm": P((d,), (None,), "one"),
+    }
+    if cfg.norm == "layernorm":
+        s["norm_b"] = P((d,), (None,), "zero")
+    return s

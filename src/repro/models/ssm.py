@@ -1,0 +1,160 @@
+"""Mamba-2 (SSD, state-space duality) blocks — arXiv:2405.21060.
+
+Chunked SSD for train/prefill (intra-chunk quadratic + inter-chunk state
+recurrence, the paper's Listing-1 decomposition) and an O(1)-per-token
+recurrent step for decode.  The depthwise causal conv1d + gating + SSD chunk
+scan is the framework's direct analogue of a USEFUSE fusion pyramid — a
+windowed op feeding a recurrent op with a uniform chunk stride (DESIGN.md
+§5) — and is fused accordingly: all chunk intermediates stay in the scan
+body, never materialized across the sequence.
+
+Shapes: heads H with head dim P (= d_inner / H), state N, groups G=1 (B/C
+shared across heads).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _segsum(a):
+    """Stable segment-sum: out[..., i, j] = sum a[..., j+1..i] (lower-tri)."""
+    T = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, D, *, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x: (b, S, H, P), dt: (b, S, H) (post-softplus), A: (H,) negative,
+    B/C: (b, S, N) shared across heads (G=1), D: (H,).
+    Returns (y (b,S,H,P), final_state (b,H,P,N)).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    assert S % chunk == 0, "uniform chunk grid"
+    nc = S // chunk
+
+    # discretize: per-step log decay and input scaling
+    dA = dt * A[None, None, :]  # (b,S,H) negative
+    xb = x * dt[..., None]  # dt-scaled input (ZOH simplification, mamba2)
+
+    # chunk views: (nc, b, chunk, ...)
+    def chunked(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xc, dAc, Bc, Cc = chunked(xb), chunked(dA), chunked(B), chunked(C)
+
+    def chunk_step(state, inp):
+        xk, dAk, Bk, Ck = inp  # (b,chunk,H,P), (b,chunk,H), (b,chunk,N)
+        cums = jnp.cumsum(dAk, axis=1)  # (b,chunk,H)
+        # ---- intra-chunk (quadratic, attention-like with decay) ----
+        L = jnp.exp(_segsum(dAk.transpose(0, 2, 1)))  # (b,H,chunk,chunk)
+        scores = jnp.einsum("bqn,bkn->bqk", Ck, Bk)  # (b,chunk,chunk)
+        y_diag = jnp.einsum(
+            "bhqk,bqk,bkhp->bqhp", L.astype(x.dtype), scores.astype(x.dtype), xk
+        )
+        # ---- contribution of the carried state ----
+        decay_in = jnp.exp(cums)  # (b,chunk,H)
+        y_off = jnp.einsum(
+            "bqn,bhpn,bqh->bqhp", Ck, state.astype(jnp.float32), decay_in
+        ).astype(x.dtype)
+        # ---- new carried state ----
+        decay_out = jnp.exp(cums[:, -1:, :] - cums)  # (b,chunk,H)
+        new_state = state * jnp.exp(cums[:, -1, :])[..., None, None] + jnp.einsum(
+            "bkn,bkh,bkhp->bhpn", Bk, decay_out, xk
+        ).astype(jnp.float32)
+        return new_state, y_diag + y_off
+
+    state0 = (
+        jnp.zeros((b, H, P, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    )
+    final_state, ys = jax.lax.scan(chunk_step, state0, (xc, dAc, Bc, Cc))
+    y = ys.swapaxes(0, 1).reshape(b, S, H, P)
+    return y + x * D[None, None, :, None], final_state
+
+
+def ssd_decode_step(state, x, dt, A, B, C, D):
+    """Single-token SSD recurrence.  state: (b,H,P,N); x: (b,H,P);
+    dt: (b,H); B/C: (b,N).  Returns (y (b,H,P), new_state)."""
+    dA = jnp.exp(dt * A[None, :])  # (b,H)
+    xb = x * dt[..., None]
+    new_state = state * dA[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xb, B
+    ).astype(state.dtype)
+    y = jnp.einsum("bhpn,bn->bhp", new_state.astype(jnp.float32), C).astype(x.dtype)
+    return y + x * D[None, :, None], new_state
+
+
+def causal_conv1d(x, w, *, state=None):
+    """Depthwise causal conv over (b, S, C) with kernel (K, C).
+
+    ``state``: (b, K-1, C) rolling buffer for decode.  Returns (y, new_state).
+    """
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1) :, :] if K > 1 else None
+    return y, new_state
+
+
+def mamba2_mixer(
+    p: dict,
+    x: jnp.ndarray,  # (b, S, d_model)
+    *,
+    n_heads: int,
+    head_dim: int,
+    state_dim: int,
+    conv_dim: int = 4,
+    chunk: int = 256,
+    ssm_cache=None,  # dict(conv=(b,K-1,conv_ch), state=(b,H,P,N)) for decode
+):
+    """Full Mamba-2 mixer: in_proj -> conv1d -> SSD -> gate -> out_proj.
+
+    Returns (y, new_cache).
+    """
+    b, S, _ = x.shape
+    d_inner = n_heads * head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xbc, dt = jnp.split(
+        zxbcdt, [d_inner, d_inner + d_inner + 2 * state_dim], axis=-1
+    )
+    conv_state = None if ssm_cache is None else ssm_cache["conv"]
+    xbc, new_conv = causal_conv1d(xbc, p["conv_w"], state=conv_state)
+    xbc = jax.nn.silu(xbc)  # mamba2: silu AFTER the causal conv
+    xs, B, C = jnp.split(xbc, [d_inner, d_inner + state_dim], axis=-1)
+    xs = xs.reshape(b, S, n_heads, head_dim)
+    dt = jax.nn.softplus(dt + p["dt_bias"])  # (b,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,) negative
+
+    if ssm_cache is None:
+        ch = min(chunk, S)
+        pad = (-S) % ch  # trailing pad never leaks backward (causal)
+        if pad:
+            xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+            C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        y, final_state = ssd_chunked(xs, dt, A, B, C, p["D"], chunk=ch)
+        if pad:
+            y = y[:, :S]
+        new_cache = None
+    else:
+        assert S == 1
+        y, final_state = ssd_decode_step(
+            ssm_cache["state"], xs[:, 0], dt[:, 0], A, B[:, 0], C[:, 0], p["D"]
+        )
+        y = y[:, None]
+        new_cache = {"conv": new_conv, "state": final_state}
+
+    y = y.reshape(b, S, d_inner)
+    y = y * jax.nn.silu(z)  # gating
+    y = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return y, new_cache

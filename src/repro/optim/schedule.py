@@ -1,0 +1,15 @@
+"""LR schedules: linear warmup + cosine decay (the production default)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup: int = 200, total: int = 10_000,
+                  floor: float = 0.1):
+    """Multiplier in [floor, 1]: linear warmup then cosine to floor."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(step / max(warmup, 1), 1.0)
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return warm * cos

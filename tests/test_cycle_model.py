@@ -1,0 +1,136 @@
+"""Cycle-model tests: Eqs. (3)-(4) against the paper's Tables 1-2."""
+
+import pytest
+
+from repro.core.cnn_models import (
+    ALEXNET_FUSION,
+    LENET5_FUSION,
+    PAPER_OPS,
+    VGG_FUSION,
+)
+from repro.core.cycle_model import (
+    DEFAULT_PARAMS,
+    evaluate_design,
+    single_layer_result,
+)
+from repro.core.fusion import plan_fusion
+
+
+def _plan(name):
+    spec = {"lenet": LENET5_FUSION, "alexnet": ALEXNET_FUSION, "vgg": VGG_FUSION}[name]
+    region = {"lenet": 1, "alexnet": 1, "vgg": None}[name]
+    return spec, plan_fusion(spec, out_region=region)
+
+
+class TestDS1Exact:
+    """Eq. (3) must reproduce Table 1 fused durations EXACTLY with the
+    paper-consistent parameters n=8, delta_OLM=delta_OLA=2, MP=2."""
+
+    @pytest.mark.parametrize(
+        "net,paper_us",
+        [("lenet", 13.75), ("alexnet", 63.99), ("vgg", 11.79)],
+    )
+    def test_fused_duration(self, net, paper_us):
+        spec, plan = _plan(net)
+        res = evaluate_design("ds1", spec, plan, PAPER_OPS[(net, "Fused")])
+        assert res.duration_us == pytest.approx(paper_us, abs=1e-9)
+
+    @pytest.mark.parametrize(
+        "net,paper_us", [("alexnet", 29.97), ("vgg", 2.52)]
+    )
+    def test_conv1_rows(self, net, paper_us):
+        spec, plan = _plan(net)
+        res = single_layer_result("ds1", spec, plan, 0, PAPER_OPS[(net, "CONV1")])
+        assert res.duration_us == pytest.approx(paper_us, abs=1e-9)
+
+    def test_lenet_conv1_known_mismatch(self):
+        """The paper's LeNet CONV1 row (5 us) is inconsistent with its own
+        Eq. (3) under any MP>=0 (documented in EXPERIMENTS.md); our model
+        gives 6.25 us.  Pin the value so regressions are visible."""
+        spec, plan = _plan("lenet")
+        res = single_layer_result("ds1", spec, plan, 0, PAPER_OPS[("lenet", "CONV1")])
+        assert res.duration_us == pytest.approx(6.25, abs=1e-9)
+
+    @pytest.mark.parametrize(
+        "net,paper_gops",
+        [("lenet", 86.10), ("alexnet", 5150.0), ("vgg", 799800.0)],
+    )
+    def test_fused_performance(self, net, paper_gops):
+        """Eq. (2): ops / duration (paper lists LeNet in GOPS, others TOPS)."""
+        spec, plan = _plan(net)
+        res = evaluate_design("ds1", spec, plan, PAPER_OPS[(net, "Fused")])
+        assert res.gops == pytest.approx(paper_gops, rel=0.01)
+
+
+class TestDS2Close:
+    """Eq. (4) reproduces Table 2 within ~2% (the residue is the paper's
+    unstated Acc/MP accounting; see EXPERIMENTS.md)."""
+
+    @pytest.mark.parametrize(
+        "net,paper_us,tol",
+        [("lenet", 128.25, 0.02), ("alexnet", 1210.0, 0.005), ("vgg", 39.40, 0.01)],
+    )
+    def test_fused_duration(self, net, paper_us, tol):
+        spec, plan = _plan(net)
+        res = evaluate_design("ds2", spec, plan, PAPER_OPS[(net, "Fused")])
+        assert res.duration_us == pytest.approx(paper_us, rel=tol)
+
+
+class TestBaselines:
+    def test_conventional_model_pinned(self):
+        """Documented divergence (EXPERIMENTS.md §Paper-tables): under our
+        clean conventional model (pipelined 1-cycle adder-tree levels) the
+        conventional spatial baseline is cycle-competitive with Eq. (3); the
+        paper's measured baseline durations (e.g. LeNet 25.75us vs our
+        model's ~8.25us) include RTL-level overheads it does not specify.
+        Pin our model's ratios so regressions are visible."""
+        spec, plan = _plan("lenet")
+        conv = evaluate_design("baseline_spatial", spec, plan, 1)
+        ds1 = evaluate_design("ds1", spec, plan, 1)
+        assert conv.cycles == 25 * 33  # (8+5+0+2)+(8+5+3+2) per movement
+        assert ds1.cycles == 25 * 55
+
+    def test_online_with_end_beats_conventional(self):
+        """The paper's realized advantage (Fig. 14): END terminates ~half of
+        all SOP digit cycles early, which only the MSDF design can exploit.
+        With the measured ~50% effective-cycle saving, DS-1+END must beat the
+        conventional baseline on every network."""
+        end_cycle_factor = 0.5  # reproduced independently in test_end_detect
+        for net in ["lenet", "alexnet", "vgg"]:
+            spec, plan = _plan(net)
+            ds1 = evaluate_design("ds1", spec, plan, 1)
+            conv = evaluate_design("baseline_spatial", spec, plan, 1)
+            assert ds1.cycles * end_cycle_factor < conv.cycles
+
+    def test_uniform_stride_beats_naive_stride(self):
+        """Baselines 1-2 (tile stride = conv stride) pay quadratically more
+        movements; uniform stride must win by >2x on every network."""
+        for net in ["lenet", "alexnet", "vgg"]:
+            spec, plan = _plan(net)
+            uni = evaluate_design("ds1", spec, plan, 1, uniform_stride=True)
+            naive = evaluate_design("ds1", spec, plan, 1, uniform_stride=False)
+            assert naive.cycles / uni.cycles > 2.0
+
+    def test_ds2_uses_fewer_units_more_cycles(self):
+        for net in ["lenet", "alexnet", "vgg"]:
+            spec, plan = _plan(net)
+            ds1 = evaluate_design("ds1", spec, plan, 1)
+            ds2 = evaluate_design("ds2", spec, plan, 1)
+            assert ds2.cycles > ds1.cycles
+
+
+class TestIntensity:
+    def test_lenet_oi_improvement_exact(self):
+        from repro.core.intensity import intensity_improvement
+
+        spec, plan = _plan("lenet")
+        assert intensity_improvement(spec, plan) == pytest.approx(8.2, abs=0.05)
+
+    def test_oi_ordering(self):
+        """Fused-uniform OI > fused-naive OI and > unfused OI, everywhere."""
+        from repro.core.intensity import fused_bytes, unfused_bytes
+
+        for net in ["lenet", "alexnet", "vgg"]:
+            spec, plan = _plan(net)
+            assert fused_bytes(spec, plan) < fused_bytes(spec, plan, uniform=False)
+            assert fused_bytes(spec, plan) < unfused_bytes(spec)

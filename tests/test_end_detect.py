@@ -1,0 +1,73 @@
+"""END (Algorithm 2) tests: soundness, coverage, zero accuracy loss."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.end_detect import end_scan, end_statistics
+from repro.core.online_arith import to_digits
+
+RNG = np.random.default_rng(7)
+
+
+class TestEndSoundness:
+    def test_never_flags_positive(self):
+        """Algorithm 2 must be exact: a flagged stream is strictly negative.
+        This is the paper's 'no accuracy loss' claim."""
+        x = RNG.uniform(-0.99, 0.99, (4096,)).astype(np.float32)
+        det, _ = end_scan(to_digits(x, 16))
+        det = np.asarray(det)
+        assert not np.any(det & (x >= 0))
+
+    def test_detects_most_negatives(self):
+        x = RNG.uniform(-0.99, 0.99, (4096,)).astype(np.float32)
+        det = np.asarray(end_scan(to_digits(x, 16))[0])
+        neg = x < 0
+        # only values in (-2^-16, 0) can escape within a 16-digit budget
+        assert det[neg].mean() > 0.99
+
+    def test_detection_cycle_tracks_magnitude(self):
+        """Strongly negative values must terminate earlier: the firing digit
+        is ~ -log2(-value) + O(1)."""
+        vals = np.float32([-0.5, -0.25, -0.125, -0.0625])
+        det, cyc = end_scan(to_digits(vals, 16))
+        assert np.all(np.asarray(det))
+        cyc = np.asarray(cyc)
+        assert np.all(np.diff(cyc) >= 0)  # smaller magnitude -> later firing
+        assert cyc[0] <= 3
+
+    def test_tiny_negative_undetermined(self):
+        """Values in (-2^-T, 0) never trip the test: the paper's
+        'undetermined' residue — they are exactly the zero-after-ReLU cases
+        that cost full cycles but no accuracy."""
+        vals = np.float32([-(2.0 ** -20)])
+        det, cyc = end_scan(to_digits(vals, 16))
+        assert not bool(det[0])
+        assert int(cyc[0]) == 16
+
+    # integer-derived floats: hypothesis float strategies reject XLA's
+    # FTZ/DAZ FPU mode (see tests/test_online_arith.py)
+    @given(st.lists(st.integers(-9900, 9900), min_size=1, max_size=64))
+    @settings(max_examples=50, deadline=None)
+    def test_soundness_property(self, ints):
+        x = np.asarray(ints, np.float32) / 10000.0
+        det, cyc = end_scan(to_digits(x, 18))
+        det, cyc = np.asarray(det), np.asarray(cyc)
+        # soundness: no false positives
+        assert not np.any(det & (x >= 0))
+        # the prefix at the firing cycle proves negativity with margin
+        for i in np.nonzero(det)[0]:
+            assert x[i] < 0
+
+
+class TestEndStats:
+    def test_stats_fields(self):
+        x = RNG.normal(0, 0.3, (2048,)).astype(np.float32).clip(-0.99, 0.99)
+        st_ = end_statistics(to_digits(x, 16), jnp.asarray(x))
+        assert st_.total == 2048
+        assert st_.detected <= st_.negative
+        assert st_.undetermined == st_.negative - st_.detected
+        assert 0.0 <= st_.cycle_savings < 1.0
+        # zero-mean inputs: about half negative, nearly all detected
+        assert 0.35 < st_.detected_frac < 0.65
+        assert st_.cycle_savings > 0.2

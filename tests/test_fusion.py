@@ -1,0 +1,152 @@
+"""Fusion-planner tests: Eq. (1), Algorithms 3-4, paper-value reproduction."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cnn_models import (
+    ALEXNET_FUSION,
+    LENET5_FUSION,
+    VGG_FUSION,
+    resnet18_fusions,
+)
+from repro.core.fusion import (
+    FusedLevel,
+    FusionSpec,
+    lockstep_plan,
+    plan_fusion,
+    receptive_window,
+    tile_sizes,
+    uniform_tile_stride,
+)
+
+
+class TestTileSizes:
+    def test_lenet_paper_example(self):
+        """§3.3.1 worked example: 1x1 output -> 2,6,12,16 going up."""
+        assert tile_sizes(LENET5_FUSION, 1) == [16, 12, 6, 2, 1]
+
+    def test_alexnet_region1(self):
+        assert tile_sizes(ALEXNET_FUSION, 1) == [67, 15, 7, 3, 1]
+
+    def test_eq1_single_level(self):
+        spec = FusionSpec(levels=(FusedLevel("conv", K=5, S=2),), input_size=32)
+        # D_l = (D_o - 1)*S + K
+        assert tile_sizes(spec, 4) == [(4 - 1) * 2 + 5, 4]
+
+
+class TestUniformStride:
+    """Algorithm 4 must reproduce the paper's alpha values."""
+
+    def test_lenet_alpha_5(self):
+        plan = plan_fusion(LENET5_FUSION, out_region=1)
+        assert plan.alpha == 5
+        # paper: S^T_2 = 2 for CL2 (6x6 tile) at alpha=5
+        assert plan.levels[2].stride == 2
+        assert plan.levels[0].stride == 4
+
+    def test_alexnet_alpha_9(self):
+        plan = plan_fusion(ALEXNET_FUSION, out_region=1)
+        assert plan.alpha == 9
+        assert plan.levels[0].tile == 67 and plan.levels[0].stride == 20
+
+    def test_vgg_alpha_3(self):
+        plan = plan_fusion(VGG_FUSION)
+        assert plan.alpha == 3
+        assert plan.out_region == 19
+
+    def test_naive_stride_rejected_for_lenet(self):
+        """The paper's motivating example: S^T = H-K+S = 12 at CL1 gives a
+        non-integer alpha (7/3 scaled ... 16/12 not integral) and must not be
+        selected."""
+        plan = uniform_tile_stride(LENET5_FUSION, 1)
+        assert plan.levels[0].stride != 12
+
+    def test_coverage_exact(self):
+        """Strides tile each conv level exactly: span == (alpha-1)*stride."""
+        for spec, r in [(LENET5_FUSION, 1), (ALEXNET_FUSION, 1)]:
+            plan = plan_fusion(spec, out_region=r)
+            for lvl, ls in zip(spec.levels, plan.levels):
+                if lvl.kind != "conv":
+                    continue
+                assert ls.ifm - ls.tile == (plan.alpha - 1) * ls.stride
+
+    def test_no_skip_bound(self):
+        for spec, r in [(LENET5_FUSION, 1), (ALEXNET_FUSION, 1)]:
+            plan = plan_fusion(spec, out_region=r)
+            for lvl, ls in zip(spec.levels, plan.levels):
+                if lvl.kind == "conv":
+                    assert ls.stride <= ls.tile - lvl.K + lvl.S
+
+    def test_resnet18_all_blocks_plannable(self):
+        for spec in resnet18_fusions():
+            plan = plan_fusion(spec)
+            assert plan.alpha >= 1
+
+
+@st.composite
+def random_chain(draw):
+    """Random small conv/pool chains with consistent channel counts."""
+    n_levels = draw(st.integers(1, 3))
+    levels = []
+    c = draw(st.integers(1, 4))
+    size = draw(st.integers(16, 48))
+    for i in range(n_levels):
+        kind = draw(st.sampled_from(["conv", "conv", "pool"]))
+        if kind == "conv":
+            K = draw(st.integers(1, 5))
+            S = draw(st.integers(1, 2))
+            pad = draw(st.integers(0, K // 2))
+            c2 = draw(st.integers(1, 4))
+            levels.append(FusedLevel("conv", K, S, pad, c, c2))
+            c = c2
+        else:
+            K = draw(st.integers(2, 3))
+            levels.append(FusedLevel("pool", K, K, 0, c, c))
+    return FusionSpec(levels=tuple(levels), input_size=size)
+
+
+class TestProperties:
+    @given(random_chain(), st.integers(1, 4))
+    @settings(max_examples=60, deadline=None)
+    def test_receptive_window_covers_output(self, spec, region):
+        """Every level's window must be computable and ordered, and the
+        level-0 window size must equal the Eq. (1) tile size minus the pads
+        accumulated along the chain (receptive_window is the padded-exact
+        variant of tile_sizes)."""
+        out = spec.feature_sizes()[-1]
+        if out < 1:
+            return
+        region = min(region, out)
+        wins = receptive_window(spec, 0, region)
+        assert len(wins) == len(spec.levels)
+        for (lo, size), lvl in zip(wins, spec.levels):
+            assert size >= lvl.K or lvl.kind == "pool"
+
+    @given(random_chain())
+    @settings(max_examples=60, deadline=None)
+    def test_lockstep_plan_covers_output(self, spec):
+        out = spec.feature_sizes()[-1]
+        if out < 1:
+            return
+        plan = lockstep_plan(spec, min(3, out))
+        covered = set()
+        for s in plan.starts:
+            covered.update(range(s, s + plan.out_region))
+        assert covered == set(range(out))
+
+    @given(random_chain(), st.integers(1, 6))
+    @settings(max_examples=60, deadline=None)
+    def test_uniform_alpha_when_found_is_consistent(self, spec, region):
+        out = spec.feature_sizes()[-1]
+        if out < 1:
+            return
+        region = min(region, out)
+        plan = uniform_tile_stride(spec, region)
+        if plan is None:
+            return
+        for lvl, ls in zip(spec.levels, plan.levels):
+            if lvl.kind != "conv":
+                continue
+            assert (ls.ifm - ls.tile) % ls.stride == 0 if ls.stride else True
+            if ls.stride:
+                assert (ls.ifm - ls.tile) // ls.stride + 1 == plan.alpha

@@ -1,0 +1,101 @@
+"""End-to-end system tests: training loop + checkpoint/restart + analyzer."""
+
+import json
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+class TestTrainLoop:
+    def test_loss_decreases_and_restart_is_exact(self):
+        """Train a reduced model; restart from a mid-run checkpoint must
+        reproduce the exact final state (deterministic pipeline + exact
+        restore)."""
+        from repro.launch.train import train
+
+        with tempfile.TemporaryDirectory() as d:
+            losses = train(
+                "deepseek_7b", steps=30, reduced=True, seq_len=64,
+                global_batch=4, ckpt_dir=d, ckpt_every=15, log_every=100,
+            )
+            assert np.isfinite(losses).all()
+            assert np.mean(losses[-4:]) < np.mean(losses[:4])  # learning
+
+            # resume from the step-15 checkpoint; replay must match exactly
+            resumed = train(
+                "deepseek_7b", steps=30, reduced=True, seq_len=64,
+                global_batch=4, ckpt_dir=d, ckpt_every=100, resume=True,
+                log_every=100,
+            )
+            np.testing.assert_allclose(
+                resumed[-1], losses[-1], rtol=1e-4,
+                err_msg="restart-replay diverged from the original run",
+            )
+
+    def test_serving_generates(self):
+        from repro.launch.serve import serve
+
+        gen, tps = serve("phi4_mini_3_8b", batch=2, prompt_len=4, new_tokens=6)
+        assert gen.shape == (2, 6)
+        assert tps > 0
+
+
+class TestHloAnalysis:
+    def test_scan_trip_counts_recovered(self):
+        """The analyzer must multiply while-body flops by the trip count
+        (XLA's cost_analysis famously does not)."""
+        from repro.launch.hloanalysis import analyze_hlo
+
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+
+        def f(x, ws):
+            y, _ = jax.lax.scan(body, x, ws)
+            return y
+
+        x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+        ws = jax.ShapeDtypeStruct((10, 128, 128), jnp.float32)
+        compiled = jax.jit(f).lower(x, ws).compile()
+        cost = analyze_hlo(compiled.as_text())
+        expect = 10 * 2 * 64 * 128 * 128
+        assert abs(cost.flops - expect) / expect < 0.05
+        # XLA's own count misses the factor of 10
+        xla = compiled.cost_analysis().get("flops", 0)
+        assert xla < cost.flops / 5
+
+    def test_nested_scan(self):
+        from repro.launch.hloanalysis import analyze_hlo
+
+        def inner(c, w):
+            return c @ w, None
+
+        def outer(c, ws):
+            c, _ = jax.lax.scan(inner, c, ws)
+            return c, None
+
+        def f(x, ws):
+            y, _ = jax.lax.scan(outer, x, jnp.broadcast_to(ws, (3,) + ws.shape))
+            return y
+
+        x = jnp.ones((16, 32))
+        ws = jnp.ones((4, 32, 32))
+        compiled = jax.jit(f).lower(x, ws).compile()
+        cost = analyze_hlo(compiled.as_text())
+        expect = 3 * 4 * 2 * 16 * 32 * 32
+        assert abs(cost.flops - expect) / expect < 0.05
+
+
+class TestDataPipelineLearnable:
+    def test_bigram_structure_present(self):
+        """The synthetic stream embeds a learnable bigram rule (the training
+        examples rely on it to show loss decrease)."""
+        from repro.data.pipeline import DataConfig, batch_at
+
+        cfg = DataConfig(vocab=1000, seq_len=512, global_batch=4)
+        t = batch_at(cfg, 0)["tokens"]
+        pred = (t[:, :-1] * 31 + 7) % cfg.vocab
+        frac = (t[:, 1:] == pred).mean()
+        assert 0.35 < frac < 0.65  # ~half the transitions follow the rule

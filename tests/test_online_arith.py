@@ -1,0 +1,113 @@
+"""Online (MSDF) arithmetic tests: Algorithm 1, adders, SOP trees."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.online_arith import (
+    from_digits,
+    online_add,
+    online_mul_sp,
+    online_sop,
+    prefix_values,
+    sop_digits_fast,
+    to_digits,
+)
+
+RNG = np.random.default_rng(42)
+
+
+class TestEncodeDecode:
+    def test_roundtrip(self):
+        x = RNG.uniform(-0.999, 0.999, (256,)).astype(np.float32)
+        d = to_digits(x, 20)
+        assert np.all(np.isin(np.asarray(d), [-1.0, 0.0, 1.0]))
+        np.testing.assert_allclose(from_digits(d), x, atol=2.0 ** -20)
+
+    def test_digit_bound_invariant(self):
+        """Prefix error of a valid SD stream is < 2**-j after j digits."""
+        x = RNG.uniform(-0.99, 0.99, (64,)).astype(np.float32)
+        d = to_digits(x, 16)
+        pref = np.asarray(prefix_values(d))
+        for j in range(16):
+            assert np.all(np.abs(pref[:, j] - x) <= 2.0 ** -(j + 1) + 1e-6)
+
+    # NOTE: hypothesis float strategies are unusable here — XLA sets FTZ/DAZ
+    # FPU flags on import, which hypothesis detects and rejects.  Floats are
+    # derived from integer strategies instead (same coverage, exact values).
+    @given(st.lists(st.integers(-9999, 9999), min_size=1, max_size=32))
+    @settings(max_examples=40, deadline=None)
+    def test_roundtrip_property(self, ints):
+        x = np.asarray(ints, np.float32) / 10000.0
+        np.testing.assert_allclose(
+            np.asarray(from_digits(to_digits(x, 18))), x, atol=2.0 ** -17
+        )
+
+
+class TestOnlineMultiplier:
+    def test_algorithm1_vs_product(self):
+        x = RNG.uniform(-0.99, 0.99, (128,)).astype(np.float32)
+        y = RNG.uniform(-0.99, 0.99, (128,)).astype(np.float32)
+        z = online_mul_sp(to_digits(x, 16), jnp.asarray(y), 20)
+        np.testing.assert_allclose(
+            np.asarray(from_digits(z)), x * y, atol=2.0 ** -14
+        )
+
+    def test_output_digits_valid(self):
+        x = RNG.uniform(-0.9, 0.9, (64,)).astype(np.float32)
+        y = RNG.uniform(-0.9, 0.9, (64,)).astype(np.float32)
+        z = np.asarray(online_mul_sp(to_digits(x, 12), jnp.asarray(y), 16))
+        assert np.all(np.isin(z, [-1.0, 0.0, 1.0]))
+
+    def test_msdf_prefix_converges(self):
+        """MSDF property: each output prefix approximates the product to
+        within one unit in its last place — the enabling fact for END."""
+        x = RNG.uniform(-0.9, 0.9, (64,)).astype(np.float32)
+        y = RNG.uniform(-0.9, 0.9, (64,)).astype(np.float32)
+        z = online_mul_sp(to_digits(x, 16), jnp.asarray(y), 16)
+        pref = np.asarray(prefix_values(z))
+        target = x * y
+        for j in range(2, 16):
+            assert np.all(np.abs(pref[:, j] - target) <= 2.0 ** -(j) + 1e-5)
+
+    @given(st.integers(-9500, 9500), st.integers(-9500, 9500))
+    @settings(max_examples=60, deadline=None)
+    def test_multiplier_property(self, xi, yi):
+        xv, yv = xi / 10000.0, yi / 10000.0
+        x = np.float32([xv])
+        y = np.float32([yv])
+        z = from_digits(online_mul_sp(to_digits(x, 16), jnp.asarray(y), 20))
+        assert abs(float(z[0]) - np.float32(xv) * np.float32(yv)) <= 2.0 ** -14
+
+
+class TestOnlineAdder:
+    def test_add_scaled(self):
+        a = RNG.uniform(-0.9, 0.9, (128,)).astype(np.float32)
+        b = RNG.uniform(-0.9, 0.9, (128,)).astype(np.float32)
+        s = from_digits(online_add(to_digits(a, 16), to_digits(b, 16)))
+        np.testing.assert_allclose(np.asarray(s), (a + b) / 2, atol=2.0 ** -14)
+
+
+class TestSop:
+    def test_tree_matches_dot(self):
+        x = RNG.uniform(-0.9, 0.9, (32, 9)).astype(np.float32)
+        y = RNG.uniform(-0.9, 0.9, (32, 9)).astype(np.float32)
+        dig, depth = online_sop(to_digits(x, 14), jnp.asarray(y), 18)
+        got = np.asarray(from_digits(dig)) * 2.0 ** depth
+        np.testing.assert_allclose(got, (x * y).sum(-1), atol=2.0 ** -8)
+
+    def test_fast_path_signs_agree_with_tree(self):
+        from repro.core.end_detect import end_scan
+
+        x = RNG.uniform(-0.9, 0.9, (256, 9)).astype(np.float32)
+        y = RNG.uniform(-0.9, 0.9, (256, 9)).astype(np.float32)
+        dig_tree, _ = online_sop(to_digits(x, 12), jnp.asarray(y), 16)
+        dig_fast, _ = sop_digits_fast(jnp.asarray(x), jnp.asarray(y), 16)
+        det_t, cyc_t = end_scan(dig_tree)
+        det_f, cyc_f = end_scan(dig_fast)
+        det_t, det_f = np.asarray(det_t), np.asarray(det_f)
+        assert (det_t == det_f).mean() >= 0.98
+        both = det_t & det_f
+        if both.any():
+            assert np.abs(np.asarray(cyc_t)[both] - np.asarray(cyc_f)[both]).max() <= 2
