@@ -48,6 +48,61 @@ def _kernel_micro():
     print(f"kernel_online_sop_512x25,interpret,{dt * 1e6:.0f},us_per_call")
 
 
+def _vgg_q4_fusion_delta():
+    """Single-kernel VGG Q=4 (the variadic pyramid) vs the historical 2+2
+    chained path: analytic HBM traffic at paper scale (224^2) and interpret-
+    mode wall clock at reduced scale.  The chained path round-trips the
+    block-1 output feature map through HBM; the single launch does not."""
+    import dataclasses
+    import jax
+
+    from repro.core.cnn_models import VGG_FUSION
+    from repro.core.executor import init_pyramid_params
+    from repro.core.program import compile_program, pick_out_region
+    from repro.kernels.fused_conv.ops import fused_pyramid_chain, plan_chunks
+
+    modes = [("single", {}), ("chained2", {"max_convs_per_chunk": 2})]
+    traffic = {}
+    for label, kwargs in modes:
+        chunks = plan_chunks(VGG_FUSION, **kwargs)
+        total = 0
+        for ch in chunks:
+            prog = compile_program(ch, pick_out_region(ch))
+            total += prog.hbm_bytes(1)
+        traffic[label] = total
+        print(
+            f"vgg_q4_hbm_traffic,{label},{len(chunks)}_launches,"
+            f"{total},bytes"
+        )
+    saved = traffic["chained2"] - traffic["single"]
+    print(
+        f"vgg_q4_hbm_traffic_delta,single_vs_chained2,{saved},bytes_saved,"
+        f"{saved / traffic['chained2']:.1%},of_chained"
+    )
+
+    spec = dataclasses.replace(VGG_FUSION, input_size=32)
+    params = init_pyramid_params(spec, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32, 3))
+    wall = {}
+    for label, kwargs in modes:
+        y, _ = fused_pyramid_chain(
+            x, params.weights, params.biases, spec=spec, **kwargs
+        )  # warm the jit caches
+        jax.block_until_ready(y)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            y, _ = fused_pyramid_chain(
+                x, params.weights, params.biases, spec=spec, **kwargs
+            )
+            jax.block_until_ready(y)
+        wall[label] = (time.perf_counter() - t0) / 3
+        print(f"vgg_q4_wallclock,{label},interpret,{wall[label] * 1e3:.1f},ms_per_call")
+    print(
+        f"vgg_q4_wallclock_delta,single_vs_chained2,"
+        f"{(wall['chained2'] - wall['single']) * 1e3:.1f},ms_saved_per_call"
+    )
+
+
 def main() -> None:
     from benchmarks import end_savings, intensity, paper_tables
 
@@ -60,6 +115,9 @@ def main() -> None:
     print("== kernels (interpret-mode wall time; TPU perf comes from the"
           " dry-run roofline) ==")
     _kernel_micro()
+    print("== VGG Q=4: single-kernel fusion vs 2+2 chained (HBM traffic +"
+          " latency) ==")
+    _vgg_q4_fusion_delta()
 
 
 if __name__ == "__main__":

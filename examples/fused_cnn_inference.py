@@ -2,22 +2,24 @@
 
 Runs AlexNet's first fused block (conv1+pool1+conv2+pool2) through the
 fused_conv Pallas kernel — the whole pyramid executes per tile with the
-intermediate feature map resident in VMEM — and verifies against the
-monolithic reference.  Also demonstrates the END tile-skip firing on
-spatially sparse input.
+intermediate feature maps resident in VMEM — and verifies against the
+monolithic reference.  Also demonstrates the END tile-skip cascade firing on
+spatially sparse input, and VGG blocks 1-2 (Q=4 convs + 2 pools) running as
+a *single* variadic kernel launch: no intermediate map ever touches HBM.
 
 Run:  PYTHONPATH=src python examples/fused_cnn_inference.py
 """
 
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.cnn_models import ALEXNET_FUSION
+from repro.core.cnn_models import ALEXNET_FUSION, VGG_FUSION
 from repro.core.executor import init_pyramid_params
-from repro.kernels.fused_conv.ops import fused_conv2
-from repro.kernels.fused_conv.ref import fused_conv2_ref
+from repro.kernels.fused_conv.ops import fused_conv2, fused_pyramid
+from repro.kernels.fused_conv.ref import fused_conv2_ref, fused_pyramid_ref
 
 spec = ALEXNET_FUSION
 params = init_pyramid_params(spec, jax.random.PRNGKey(0))
@@ -48,3 +50,17 @@ ref2 = fused_conv2_ref(xs, spec, params.weights[0], b1, params.weights[1],
                        params.biases[1])
 print("sparse input: END skipped", int(skip2.sum()), "/", skip2.size,
       "tiles; err", float(jnp.abs(out2 - ref2).max()))
+
+# --- VGG blocks 1-2 as ONE kernel launch (Q=4 fusion pyramid) --------------
+# Reduced spatial size keeps interpret mode quick; the level structure (four
+# 3x3 convs + two 2x2 pools) is VGG's.  skip3 carries one END-cascade flag
+# per conv level per tile.
+vgg = dataclasses.replace(VGG_FUSION, input_size=32)
+vp = init_pyramid_params(vgg, jax.random.PRNGKey(3))
+xv = jax.random.normal(jax.random.PRNGKey(4), (1, 32, 32, 3))
+t0 = time.time()
+out3, skip3 = fused_pyramid(xv, vp.weights, vp.biases, spec=vgg, out_region=4)
+print(f"VGG Q=4 single launch: out {out3.shape} skip {skip3.shape} "
+      f"in {time.time() - t0:.1f}s (interpret mode)")
+ref3 = fused_pyramid_ref(xv, vgg, vp.weights, vp.biases)
+print("max err vs monolithic reference:", float(jnp.abs(out3 - ref3).max()))

@@ -3,6 +3,8 @@
 Public API:
 
 * fusion planning — :mod:`repro.core.fusion` (Eq. (1), Algorithms 3-4)
+* tile-program compiler — :mod:`repro.core.program` (the single lowering
+  shared by the executor and the variadic Pallas kernel)
 * online arithmetic — :mod:`repro.core.online_arith` (Algorithm 1, adders)
 * early negative detection — :mod:`repro.core.end_detect` (Algorithm 2)
 * cycle / performance models — :mod:`repro.core.cycle_model` (Eqs. (2)-(4))
@@ -20,6 +22,15 @@ from .fusion import (
     receptive_window,
     tile_sizes,
     uniform_tile_stride,
+)
+from .program import (
+    ConvLevelProg,
+    LevelWindow,
+    TileProgram,
+    WindowProgram,
+    compile_program,
+    compile_windows,
+    pick_out_region,
 )
 from .cycle_model import ArithParams, DesignResult, evaluate_design
 from .end_detect import EndStats, end_scan, end_statistics
@@ -40,8 +51,15 @@ from .online_arith import (
 
 __all__ = [
     "ArithParams",
+    "ConvLevelProg",
     "DesignResult",
     "EndStats",
+    "LevelWindow",
+    "TileProgram",
+    "WindowProgram",
+    "compile_program",
+    "compile_windows",
+    "pick_out_region",
     "FusedLevel",
     "FusionPlan",
     "FusionSpec",

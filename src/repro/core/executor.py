@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .fusion import FusionSpec, LockstepPlan, lockstep_plan
+from .program import compile_windows
 
 
 @dataclass
@@ -108,21 +109,20 @@ def fused_forward(
     """Execute the fused pyramid tile-by-tile per the lockstep plan.
 
     The alpha x alpha tile grid covers the final output; each tile's chain is
-    traced back through Eq. (1) windows and computed from tile-local data.
+    traced back through the compiled Eq. (1) windows
+    (:func:`repro.core.program.compile_windows` — the same tile-program
+    lowering the Pallas kernel consumes) and computed from tile-local data.
     """
-    from .fusion import receptive_window
-
     if plan is None:
         plan = lockstep_plan(spec, out_region or 1)
-    out_size = spec.feature_sizes()[-1]
-    n_out = spec.levels[-1].n_out if spec.levels[-1].kind != "conv" else (
-        spec.levels[-1].n_out
+    wprog = compile_windows(spec, plan.out_region)
+    out = jnp.zeros(
+        (x.shape[0], wprog.out_size, wprog.out_size, wprog.n_out), jnp.float32
     )
-    out = jnp.zeros((x.shape[0], out_size, out_size, n_out), jnp.float32)
     for si in plan.starts:
-        wins_i = receptive_window(spec, si, plan.out_region)
+        wins_i = wprog.level_windows(si)
         for sj in plan.starts:
-            wins_j = receptive_window(spec, sj, plan.out_region)
+            wins_j = wprog.level_windows(sj)
             # first-level slice (row window from si, col window from sj)
             (lo_i, size_i), (lo_j, size_j) = wins_i[0], wins_j[0]
             p0 = spec.levels[0].pad

@@ -1,0 +1,336 @@
+"""Tile-program compiler: one lowering pass shared by planner, executor, and
+the variadic Pallas kernel.
+
+``FusionSpec`` + a chosen output region lower to a static *tile program*:
+
+* **Eq. (1) windows** — the per-level receptive windows of an output tile,
+  expressed affinely in the tile's final-output start coordinate
+  (:class:`LevelWindow`: ``lo(start) = base + step * start``, constant
+  ``size``).  This is the only place window/offset math is derived; the
+  executor (:mod:`repro.core.executor`) and the kernel wrapper
+  (:mod:`repro.kernels.fused_conv.ops`) both consume it.
+* **Uniform-stride grid** — Algorithm 4 realized as an ``alpha x alpha``
+  movement grid: every level moves the same number of times, the level-0 tile
+  stride is ``stride0`` (:class:`TileProgram`).
+* **Validity-mask ranges** — per conv level, the affine global output
+  coordinate (``o_base + i * o_step``) and the valid extent used to zero
+  rows that fall in a level's padding; ditto for the pool epilogue
+  (:class:`ConvLevelProg`).
+* **Pool epilogues** — each pool level is folded into the preceding conv
+  level's program (the paper's Fig. 4 pooling block is slaved to the conv
+  tile; see DESIGN.md §3).
+* **VMEM-budget accounting** — :meth:`TileProgram.vmem_bytes` models the
+  kernel's resident working set; :func:`pick_out_region` scans output regions
+  against the budget and :meth:`TileProgram.hbm_bytes` models the per-launch
+  off-chip traffic (the quantity fusion minimizes).
+
+The compiler is pure Python over static shapes: programs are frozen,
+hashable dataclasses suitable as jit static arguments.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .fusion import FusionSpec, receptive_window
+
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024  # v5e per-core VMEM
+
+
+# ---------------------------------------------------------------------------
+# Eq. (1) windows, affine in the output start coordinate
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LevelWindow:
+    """Eq. (1) window of one spec level, affine in the final-output start.
+
+    A final-output interval ``[s, s + out_region)`` needs this level's padded
+    input rows ``[base + step * s, base + step * s + size)``; ``step`` is the
+    cumulative stride of this level and everything below it.
+    """
+
+    base: int
+    step: int
+    size: int
+
+    def at(self, start: int) -> tuple[int, int]:
+        return (self.base + self.step * start, self.size)
+
+
+@dataclass(frozen=True)
+class WindowProgram:
+    """Per-level Eq. (1) windows plus output geometry.
+
+    The contract consumed by the value-level executor: it needs windows for
+    *arbitrary* (possibly ragged/clamped) output starts, so offsets stay
+    affine in the start coordinate rather than in a grid index.
+    """
+
+    spec: FusionSpec
+    out_region: int
+    windows: tuple[LevelWindow, ...]
+    out_size: int
+    n_out: int
+
+    def level_windows(self, start: int) -> list[tuple[int, int]]:
+        """Per-level ``(lo, size)`` in padded input coords for one start."""
+        return [w.at(start) for w in self.windows]
+
+
+def chain_channels(spec: FusionSpec) -> int:
+    """Channel count leaving the chain (pools are channel-preserving)."""
+    c = spec.levels[0].n_in
+    for lvl in spec.levels:
+        if lvl.kind == "conv":
+            c = lvl.n_out
+    return c
+
+
+def compile_windows(spec: FusionSpec, out_region: int) -> WindowProgram:
+    """Lower the Eq. (1) receptive-window chain to affine per-level windows.
+
+    ``receptive_window`` is exact but pointwise; every level's window start is
+    affine in the output start (each level applies ``lo -> lo * S`` and a
+    constant pad shift), so two evaluations recover ``(base, step)``.
+    """
+    wins0 = receptive_window(spec, 0, out_region)
+    wins1 = receptive_window(spec, 1, out_region)
+    windows = tuple(
+        LevelWindow(base=w0[0], step=w1[0] - w0[0], size=w0[1])
+        for w0, w1 in zip(wins0, wins1)
+    )
+    return WindowProgram(
+        spec=spec,
+        out_region=out_region,
+        windows=windows,
+        out_size=spec.feature_sizes()[-1],
+        n_out=chain_channels(spec),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level program: per-conv-level static offsets + the uniform grid
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ConvLevelProg:
+    """Static per-conv-level kernel program (offsets affine in tile index).
+
+    ``o_base + i * o_step`` is the global output coordinate of tile row 0 at
+    grid index ``i``; rows outside ``[0, valid)`` are this level's padding and
+    get masked to zero.  A trailing pool level is folded in as an epilogue
+    with its own offset/valid triple.
+    """
+
+    K: int
+    S: int
+    n_in: int
+    n_out: int
+    in_size: int  # tile spatial size entering this level
+    out_size: int  # tile spatial size leaving the conv
+    o_base: int  # global output coord of tile row 0 at tile index 0
+    o_step: int  # global output coord step per tile index
+    valid: int  # level's valid output extent (mask range)
+    pool: tuple[int, int] | None  # (K, S) of trailing pool, if any
+    pool_out: int  # tile spatial size after pool (== out_size if no pool)
+    pool_o_base: int = 0
+    pool_o_step: int = 0
+    pool_valid: int = 0
+
+
+@dataclass(frozen=True)
+class TileProgram:
+    """Complete static program for one variadic fusion-pyramid launch.
+
+    ``levels`` holds one :class:`ConvLevelProg` per conv level (any Q >= 1),
+    pools folded in.  ``tile0``/``stride0`` cut level-0 tiles out of the
+    pre-padded input; the grid is ``(batch, alpha, alpha)``.
+    """
+
+    spec: FusionSpec
+    out_region: int
+    alpha: int
+    levels: tuple[ConvLevelProg, ...]
+    tile0: int
+    stride0: int
+    pad_lo: int
+    pad_hi: int
+    out_size: int
+    n_out: int
+
+    @property
+    def q_convs(self) -> int:
+        return len(self.levels)
+
+    @property
+    def padded_input(self) -> int:
+        return self.pad_lo + self.spec.input_size + self.pad_hi
+
+    def weight_floats(self) -> int:
+        return sum(p.K * p.K * p.n_in * p.n_out + p.n_out for p in self.levels)
+
+    def level_weight_counts(self) -> tuple[int, ...]:
+        """Flattened float count of each level's weight tensor (bias excluded)
+        — the slice table for streamed-weight launches."""
+        return tuple(p.K * p.K * p.n_in * p.n_out for p in self.levels)
+
+    def vmem_bytes(self) -> int:
+        """Resident working set of one kernel instance, in bytes.
+
+        Image block (whole padded image of one batch element) + all weights
+        ("filters are loaded into the kernel buffers only once", §3.3.1) +
+        the per-level tile buffers of the pyramid.
+        """
+        c0 = self.levels[0].n_in
+        floats = self.padded_input ** 2 * c0 + self.weight_floats()
+        floats += self.tile0 ** 2 * c0
+        for p in self.levels:
+            floats += p.out_size ** 2 * p.n_out
+            if p.pool is not None:
+                floats += p.pool_out ** 2 * p.n_out
+        return 4 * floats
+
+    def vmem_stream_bytes(self) -> int:
+        """Working set with per-level weight streaming: only the largest
+        single level's weights are VMEM-resident at once (DMA'd from HBM into
+        a scratch buffer level by level); biases stay resident.  The fallback
+        when :meth:`vmem_bytes` busts the budget — e.g. ResNet-18's last
+        block, whose two 512x512 3x3 weight tensors alone exceed 16 MiB."""
+        c0 = self.levels[0].n_in
+        floats = self.padded_input ** 2 * c0
+        floats += max(self.level_weight_counts())
+        floats += sum(p.n_out for p in self.levels)  # biases
+        floats += self.tile0 ** 2 * c0
+        for p in self.levels:
+            floats += p.out_size ** 2 * p.n_out
+            if p.pool is not None:
+                floats += p.pool_out ** 2 * p.n_out
+        return 4 * floats
+
+    def hbm_bytes(self, batch: int = 1, *, streamed: bool = False) -> int:
+        """Off-chip traffic of one launch: read input map + weights, write
+        output map + skip flags.  Chained launches pay this per chunk — the
+        intermediate maps crossing HBM are exactly what fusion removes.
+        Streamed-weight launches re-read the weights once per grid cell."""
+        c0 = self.levels[0].n_in
+        w_reads = batch * self.alpha ** 2 if streamed else 1
+        read = batch * self.padded_input ** 2 * c0 + w_reads * self.weight_floats()
+        write = (
+            batch * self.out_size ** 2 * self.n_out
+            + batch * self.alpha ** 2 * self.q_convs  # int32 skip flags
+        )
+        return 4 * (read + write)
+
+
+def compile_program(spec: FusionSpec, out_region: int) -> TileProgram:
+    """Lower a fusion spec + output region to the kernel's static program.
+
+    Requires the final output to be exactly tiled by ``out_region`` (the
+    uniform-stride grid — every level moves ``alpha`` times per dim).  Every
+    pool level must directly follow a conv level: pools execute as epilogues
+    of the preceding conv tile (Fig. 4), so a leading or doubled pool has no
+    conv program to fold into.
+    """
+    levels = spec.levels
+    assert levels and levels[0].kind == "conv", (
+        "chain must start with a conv level"
+    )
+    for l, lvl in enumerate(levels):
+        if lvl.kind == "pool":
+            assert levels[l - 1].kind == "conv", (
+                "each pool level must directly follow a conv level"
+            )
+    sizes = spec.feature_sizes()
+    out_size = sizes[-1]
+    assert out_size % out_region == 0, (
+        f"out_region {out_region} must tile the {out_size} output exactly"
+    )
+    alpha = out_size // out_region
+
+    win = compile_windows(spec, out_region).windows
+    progs = []
+    for l, lvl in enumerate(levels):
+        if lvl.kind != "conv":
+            continue
+        in_size = win[l].size
+        out_sz = (in_size - lvl.K) // lvl.S + 1
+        pool = None
+        pool_out = out_sz
+        pool_ob = pool_os = pool_valid = 0
+        if l + 1 < len(levels) and levels[l + 1].kind == "pool":
+            pk, ps = levels[l + 1].K, levels[l + 1].S
+            pool = (pk, ps)
+            pool_out = (out_sz - pk) // ps + 1
+            pool_ob = win[l + 1].base // ps
+            pool_os = (win[l + 1].step * out_region) // ps
+            pool_valid = sizes[l + 2]
+        progs.append(
+            ConvLevelProg(
+                K=lvl.K,
+                S=lvl.S,
+                n_in=lvl.n_in,
+                n_out=lvl.n_out,
+                in_size=in_size,
+                out_size=out_sz,
+                o_base=win[l].base // lvl.S,
+                o_step=(win[l].step * out_region) // lvl.S,
+                valid=sizes[l + 1],
+                pool=pool,
+                pool_out=pool_out,
+                pool_o_base=pool_ob,
+                pool_o_step=pool_os,
+                pool_valid=pool_valid,
+            )
+        )
+    for prev, cur in zip(progs, progs[1:]):
+        assert prev.pool_out == cur.in_size, "window chain is inconsistent"
+
+    tile0 = win[0].size
+    lo0 = win[0].base - levels[0].pad  # unpadded coords; <= 0 by construction
+    assert lo0 <= 0, "level-0 window cannot start inside the image"
+    stride0 = win[0].step * out_region
+    pad_lo = -lo0
+    last_end = lo0 + (alpha - 1) * stride0 + tile0
+    pad_hi = max(0, last_end - spec.input_size)
+    return TileProgram(
+        spec=spec,
+        out_region=out_region,
+        alpha=alpha,
+        levels=tuple(progs),
+        tile0=tile0,
+        stride0=stride0,
+        pad_lo=pad_lo,
+        pad_hi=pad_hi,
+        out_size=out_size,
+        n_out=chain_channels(spec),
+    )
+
+
+def pick_out_region(
+    spec: FusionSpec,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+    *,
+    allow_stream: bool = True,
+) -> int | None:
+    """Largest output region that tiles the output exactly and whose program
+    fits the VMEM budget — the TPU analogue of the paper's ``H <= IFM``
+    feasibility bound (DESIGN.md §2 assumption change #2).
+
+    Fully-resident weights are preferred; when no region fits that way and
+    ``allow_stream``, regions feasible under per-level weight streaming are
+    considered.  Returns ``None`` when nothing fits (the chain must then be
+    chunked).
+    """
+    out_size = spec.feature_sizes()[-1]
+    regions = [r for r in range(out_size, 0, -1) if out_size % r == 0]
+    for r in regions:
+        if compile_program(spec, r).vmem_bytes() <= vmem_budget:
+            return r
+    if allow_stream:
+        for r in regions:
+            if compile_program(spec, r).vmem_stream_bytes() <= vmem_budget:
+                return r
+    return None

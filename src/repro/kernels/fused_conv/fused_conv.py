@@ -1,11 +1,16 @@
-"""Pallas TPU kernel: USEFUSE fusion pyramid (conv+ReLU[+pool] x2) in VMEM.
+"""Pallas TPU kernel: variadic USEFUSE fusion pyramid (conv+ReLU[+pool] x Q).
 
 The paper's fused-layer dataflow, adapted to the TPU memory hierarchy
 (DESIGN.md §2): one grid cell computes one fusion-pyramid tile end to end —
-the level-1 intermediate never leaves VMEM (the TPU analogue of "no off-chip
-intermediate traffic").  The grid is the uniform-stride tile plan: the
+every intermediate level stays in VMEM (the TPU analogue of "no off-chip
+intermediate traffic") for *any* pyramid depth Q >= 1, including odd Q and
+ResNet-style conv-only pairs.  The grid is the uniform-stride tile plan: the
 ``alpha x alpha`` movement grid with identical movement counts at every level
 is exactly Algorithm 4's uniform stride, realized as a Pallas grid.
+
+The kernel is compiled from a :class:`~repro.core.program.TileProgram` — the
+single tile-program lowering shared with the value-level executor — and
+receives one ``ConvLevelProg`` per conv level (pool epilogues folded in).
 
 Per grid cell (b, i, j):
   * the image block (whole padded image of batch b) is VMEM-resident; the
@@ -18,45 +23,29 @@ Per grid cell (b, i, j):
     coordinate falls outside a level's valid output range are zeroed — zeros
     are exactly the next level's pad value, and post-ReLU zeros are neutral
     for maxpool (the executor's crop logic, branch-free for SIMD);
-  * END tile-skip (the paper's §3.2 insight at TPU-feasible granularity):
-    when the entire level-1 post-ReLU tile is zero, ``@pl.when`` skips the
-    level-2 convolution and emits its closed form ``pool(relu(b2))``; a skip
-    flag per tile is emitted for the energy/cycle statistics.
+  * END tile-skip (the paper's §3.2 insight at TPU-feasible granularity)
+    generalizes to a **cascade**: at every level l >= 1, if the incoming
+    post-ReLU tile is all zero the level's K^2 MXU pass is skipped and its
+    output collapses to the closed form ``epilogue(relu(b_l))``; the constant
+    tile feeds the next level, which applies the same test — so a dead tile
+    with non-positive downstream biases short-circuits the whole remaining
+    pyramid.  A per-level skip flag is emitted for energy/cycle statistics.
 
 Weights live whole in VMEM ("filters are loaded into the kernel buffers only
-once", §3.3.1).  VMEM budget: image block (<=227^2*3*4B = 618 KiB) + weights
-(AlexNet fused: <=2.5 MiB) + tiles -- < 4 MiB, comfortably inside 16 MiB/core
-(v5e); asserted in ops.py.
+once", §3.3.1); the VMEM working set is accounted by
+:meth:`~repro.core.program.TileProgram.vmem_bytes` and asserted in ops.py.
 """
 
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-
-@dataclass(frozen=True)
-class ConvLevelProg:
-    """Static per-conv-level program (offsets are affine in the tile index)."""
-
-    K: int
-    S: int
-    in_size: int  # tile spatial size entering this level
-    out_size: int  # tile spatial size leaving the conv
-    o_base: int  # global output coord of tile row 0 at tile index 0
-    o_step: int  # global output coord step per tile index
-    valid: int  # level's valid output extent (mask range)
-    pool: tuple[int, int] | None  # (K, S) of trailing pool, if any
-    pool_out: int  # tile spatial size after pool (== out_size if no pool)
-    # pool-output masking (pool windows straddling the valid boundary mix
-    # real data into rows the next level expects to be padding)
-    pool_o_base: int = 0
-    pool_o_step: int = 0
-    pool_valid: int = 0
+from repro.core.program import ConvLevelProg, TileProgram  # noqa: F401 (re-export)
 
 
 def _conv_tile(x, w, b, K: int, S: int, out: int):
@@ -106,119 +95,170 @@ def _level_epilogue(t, idx, prog: ConvLevelProg):
     return t
 
 
-def _fused2_kernel(
-    x_ref,
-    w1_ref,
-    b1_ref,
-    w2_ref,
-    b2_ref,
-    out_ref,
-    skip_ref,
-    *,
-    p1: ConvLevelProg,
-    p2: ConvLevelProg,
+def _const_level(idx, prog: ConvLevelProg, b, relu: bool):
+    """Closed form of a level whose input tile is all zero: the conv output
+    is the bias everywhere, so the tile is ``epilogue(relu(b))``."""
+    c = jnp.maximum(b, 0.0) if relu else b
+    t = jnp.broadcast_to(c, (prog.out_size, prog.out_size, c.shape[-1]))
+    return _level_epilogue(t, idx, prog)
+
+
+def _pyramid_kernel(
+    *refs,
+    progs: tuple[ConvLevelProg, ...],
     tile0: int,
     stride0: int,
     relu: bool,
     end_skip: bool,
+    stream: bool,
 ):
+    q = len(progs)
+    x_ref = refs[0]
+    if stream:
+        # weights arrive as one flat HBM-space array; each level's slice is
+        # DMA'd into the shared VMEM scratch just before it is needed.
+        wflat_ref = refs[1]
+        b_refs = refs[2 : 2 + q]
+        out_ref, skip_ref = refs[2 + q], refs[3 + q]
+        w_scratch, w_sem = refs[4 + q], refs[5 + q]
+    else:
+        w_refs = refs[1 : 1 + 2 * q : 2]
+        b_refs = refs[2 : 2 + 2 * q : 2]
+        out_ref, skip_ref = refs[1 + 2 * q], refs[2 + 2 * q]
     i = pl.program_id(1)
     j = pl.program_id(2)
     idx = (i, j)
 
     # ---- level-0 tile from the VMEM-resident image block ----
-    x = x_ref[0, pl.ds(i * stride0, tile0), pl.ds(j * stride0, tile0), :]
+    t = x_ref[0, pl.ds(i * stride0, tile0), pl.ds(j * stride0, tile0), :]
 
-    # ---- level 1: conv + ReLU (+ pool), masked to valid range ----
-    t1 = _conv_tile(x, w1_ref[...], b1_ref[...], p1.K, p1.S, p1.out_size)
-    if relu:
-        t1 = jnp.maximum(t1, 0.0)
-    t1 = _level_epilogue(t1, idx, p1)
+    skips = []
+    w_off = 0
+    for l, prog in enumerate(progs):
+        cnt = prog.K * prog.K * prog.n_in * prog.n_out
+        if stream:
+            # fetch lazily inside the live branch: an END-skipped level must
+            # not pay its HBM weight read either
+            def fetch_w(w_off=w_off, cnt=cnt, prog=prog):
+                dma = pltpu.make_async_copy(
+                    wflat_ref.at[pl.ds(w_off, cnt)],
+                    w_scratch.at[pl.ds(0, cnt)],
+                    w_sem,
+                )
+                dma.start()
+                dma.wait()
+                return w_scratch[0:cnt].reshape(
+                    prog.K, prog.K, prog.n_in, prog.n_out
+                )
 
-    def level2(t1_in):
-        t2 = _conv_tile(t1_in, w2_ref[...], b2_ref[...], p2.K, p2.S, p2.out_size)
-        if relu:
-            t2 = jnp.maximum(t2, 0.0)
-        return _level_epilogue(t2, idx, p2)
+            w_off += cnt
+        else:
+            def fetch_w(l=l):
+                return w_refs[l][...]
 
-    if end_skip and relu:
-        # END at tile granularity: an all-zero post-ReLU level-1 tile makes
-        # conv2's output the closed form relu(b2) everywhere (then pooled) —
-        # @pl.when skips the K^2 MXU pass entirely on the dead branch.
-        live = jnp.max(t1) > 0.0
-        skip_ref[0, 0, 0] = jnp.where(live, 0, 1).astype(jnp.int32)
+        b = b_refs[l][...]
 
-        @pl.when(live)
-        def _compute():
-            out_ref[0, :, :, :] = level2(t1)
+        def run_level(t_in, fetch_w=fetch_w, b=b, prog=prog):
+            tl = _conv_tile(t_in, fetch_w(), b, prog.K, prog.S, prog.out_size)
+            if relu:
+                tl = jnp.maximum(tl, 0.0)
+            return _level_epilogue(tl, idx, prog)
 
-        @pl.when(jnp.logical_not(live))
-        def _skip():
-            const = jnp.maximum(b2_ref[...], 0.0)
-            const_tile = _level_epilogue(
-                jnp.broadcast_to(
-                    const, (p2.out_size, p2.out_size, const.shape[-1])
-                ),
-                idx,
-                p2,
+        if l == 0 or not (end_skip and relu):
+            # level 0 always computes; without ReLU the all-zero test is not
+            # a sound skip predicate (negatives would survive).
+            skips.append(jnp.int32(0))
+            t = run_level(t)
+        else:
+            # END cascade: post-ReLU tiles are >= 0, so max == 0 proves the
+            # whole tile (masked halo included) is zero and the conv input is
+            # literally the zero tensor — @cond skips the K^2 MXU pass and
+            # emits the closed form instead, bit-exactly.
+            live = jnp.max(t) > 0.0
+            skips.append(jnp.where(live, 0, 1).astype(jnp.int32))
+            t = jax.lax.cond(
+                live,
+                run_level,
+                lambda t_in, b=b, prog=prog: _const_level(idx, prog, b, relu),
+                t,
             )
-            out_ref[0, :, :, :] = const_tile
-    else:
-        skip_ref[0, 0, 0] = jnp.int32(0)
-        out_ref[0, :, :, :] = level2(t1)
+
+    out_ref[0, :, :, :] = t
+    skip_ref[0, 0, 0, :] = jnp.stack(skips)
 
 
-def fused_conv2_pallas(
+def fused_pyramid_pallas(
     x_padded: jnp.ndarray,  # (B, Hp, Wp, C) pre-padded input
-    w1: jnp.ndarray,
-    b1: jnp.ndarray,
-    w2: jnp.ndarray,
-    b2: jnp.ndarray,
+    weights: list[jnp.ndarray],
+    biases: list[jnp.ndarray],
     *,
-    p1: ConvLevelProg,
-    p2: ConvLevelProg,
-    tile0: int,
-    stride0: int,
-    alpha: int,
-    out_region: int,
+    program: TileProgram,
     relu: bool = True,
     end_skip: bool = True,
     interpret: bool = True,
+    stream_weights: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Launch the fused 2-conv pyramid over the (B, alpha, alpha) grid."""
+    """Launch the variadic fused pyramid over the (B, alpha, alpha) grid.
+
+    Weights/biases are flat per-conv-level lists, index-aligned with
+    ``program.levels``.  With ``stream_weights`` the weights stay in HBM
+    (memory space ANY) and each level's tensor is DMA'd into a shared VMEM
+    scratch on demand — the fallback when the fully-resident working set
+    busts the VMEM budget (see ``TileProgram.vmem_stream_bytes``).
+
+    Returns ``(out, skip)`` with ``skip`` shaped ``(B, alpha, alpha, Q)`` —
+    ``skip[..., l] == 1`` where level ``l``'s conv was short-circuited by the
+    END cascade (level 0 never skips).
+    """
     B, Hp, Wp, C = x_padded.shape
-    m2 = w2.shape[-1]
+    q = program.q_convs
+    assert len(weights) == len(biases) == q, "one (w, b) pair per conv level"
+    alpha, out_region = program.alpha, program.out_region
+    m_out = program.n_out
     kernel = functools.partial(
-        _fused2_kernel,
-        p1=p1,
-        p2=p2,
-        tile0=tile0,
-        stride0=stride0,
+        _pyramid_kernel,
+        progs=program.levels,
+        tile0=program.tile0,
+        stride0=program.stride0,
         relu=relu,
         end_skip=end_skip,
+        stream=stream_weights,
     )
+    in_specs = [pl.BlockSpec((1, Hp, Wp, C), lambda b, i, j: (b, 0, 0, 0))]
+    operands: list[jnp.ndarray] = [x_padded]
+    scratch_shapes: list = []
+    if stream_weights:
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
+        operands.append(jnp.concatenate([w.reshape(-1) for w in weights]))
+        for bias in biases:
+            in_specs.append(pl.BlockSpec(bias.shape, lambda b, i, j: (0,)))
+            operands.append(bias)
+        scratch_shapes = [
+            pltpu.VMEM((max(program.level_weight_counts()),), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+        ]
+    else:
+        for w, bias in zip(weights, biases):
+            in_specs.append(pl.BlockSpec(w.shape, lambda b, i, j: (0,) * 4))
+            in_specs.append(pl.BlockSpec(bias.shape, lambda b, i, j: (0,)))
+            operands += [w, bias]
     out, skip = pl.pallas_call(
         kernel,
         grid=(B, alpha, alpha),
-        in_specs=[
-            pl.BlockSpec((1, Hp, Wp, C), lambda b, i, j: (b, 0, 0, 0)),
-            pl.BlockSpec(w1.shape, lambda b, i, j: (0,) * 4),
-            pl.BlockSpec(b1.shape, lambda b, i, j: (0,)),
-            pl.BlockSpec(w2.shape, lambda b, i, j: (0,) * 4),
-            pl.BlockSpec(b2.shape, lambda b, i, j: (0,)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec(
-                (1, out_region, out_region, m2), lambda b, i, j: (b, i, j, 0)
+                (1, out_region, out_region, m_out), lambda b, i, j: (b, i, j, 0)
             ),
-            pl.BlockSpec((1, 1, 1), lambda b, i, j: (b, i, j)),
+            pl.BlockSpec((1, 1, 1, q), lambda b, i, j: (b, i, j, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct(
-                (B, alpha * out_region, alpha * out_region, m2), jnp.float32
+                (B, alpha * out_region, alpha * out_region, m_out), jnp.float32
             ),
-            jax.ShapeDtypeStruct((B, alpha, alpha), jnp.int32),
+            jax.ShapeDtypeStruct((B, alpha, alpha, q), jnp.int32),
         ],
+        scratch_shapes=scratch_shapes,
         interpret=interpret,
-    )(x_padded, w1, b1, w2, b2)
+    )(*operands)
     return out, skip

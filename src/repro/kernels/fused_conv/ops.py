@@ -1,19 +1,19 @@
-"""Public wrapper for the fused conv-pyramid Pallas kernel.
+"""Public wrappers for the variadic fused conv-pyramid Pallas kernel.
 
-Compiles a :class:`~repro.core.fusion.FusionSpec` (exactly two conv levels,
-each with an optional trailing pool) into the kernel's static program:
+All window/offset math comes from the tile-program compiler
+(:mod:`repro.core.program`); this module only pads inputs, checks the VMEM
+budget, and launches:
 
-* tile sizes / window offsets from :func:`receptive_window` (Eq. (1));
-* the uniform tile grid: ``alpha`` movements of stride ``S^T`` per dim —
-  Algorithm 4 realized as the Pallas grid (requires the final output to be
-  exactly tiled by ``out_region``; callers pick a region from the planner);
-* input pre-padding that folds the level-0 conv pad plus any halo the
-  Eq. (1) chain demands at the borders.
+* :func:`fused_pyramid` — any Q >= 1 conv levels (odd Q and conv-only pairs
+  included) as **one** kernel launch; LeNet's Q=2, VGG blocks 1-2's Q=4, and
+  every ResNet-18 block each fit a single launch.
+* :func:`fused_conv2` — thin compatibility wrapper for the historical 2-conv
+  entry point (returns the old ``(B, alpha, alpha)`` skip map).
+* :func:`fused_pyramid_chain` — chunks a chain into multiple launches *only*
+  when the VMEM budget forces it (or an explicit per-chunk conv cap is given,
+  e.g. to reproduce USEFUSE's FPGA deployment granularity of Q=2 per pyramid).
 
-Deeper pyramids (e.g. VGG's Q=4 block) chain 2-conv kernel calls — the
-fusion granularity USEFUSE itself deploys on its FPGA (§4.4 fuses Q=2).
-
-A VMEM-budget assert mirrors the paper's "H <= IFM" feasibility bound with
+The VMEM-budget check mirrors the paper's "H <= IFM" feasibility bound with
 the TPU's real constraint (DESIGN.md §2 assumption change #2).
 """
 
@@ -24,130 +24,70 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.fusion import FusionSpec, receptive_window
-from .fused_conv import ConvLevelProg, fused_conv2_pallas
-
-VMEM_BUDGET_BYTES = 16 * 1024 * 1024  # v5e per-core VMEM
-
-
-def _build_programs(spec: FusionSpec, out_region: int):
-    """Static kernel program from the fusion spec + chosen output region."""
-    levels = spec.levels
-    convs = [l for l, lvl in enumerate(levels) if lvl.kind == "conv"]
-    assert len(convs) == 2, "kernel fuses exactly 2 conv levels"
-    sizes = spec.feature_sizes()
-    out_size = sizes[-1]
-    assert out_size % out_region == 0, (
-        f"out_region {out_region} must tile the {out_size} output exactly"
-    )
-    alpha = out_size // out_region
-
-    wins0 = [w for w, _ in zip(receptive_window(spec, 0, out_region), levels)]
-    wins1 = receptive_window(spec, out_region, out_region)
-    win_sizes = [w[1] for w in receptive_window(spec, 0, out_region)]
-
-    progs = []
-    for ci, l in enumerate(convs):
-        lvl = levels[l]
-        in_size = win_sizes[l]
-        out_sz = (in_size - lvl.K) // lvl.S + 1
-        o_base = wins0[l][0] // lvl.S  # output coord of tile row 0, tile 0
-        o_step = (wins1[l][0] - wins0[l][0]) // lvl.S
-        pool = None
-        pool_out = out_sz
-        pool_ob = pool_os = pool_valid = 0
-        if l + 1 < len(levels) and levels[l + 1].kind == "pool":
-            pk, ps = levels[l + 1].K, levels[l + 1].S
-            pool = (pk, ps)
-            pool_out = (out_sz - pk) // ps + 1
-            pool_ob = wins0[l + 1][0] // ps
-            pool_os = (wins1[l + 1][0] - wins0[l + 1][0]) // ps
-            pool_valid = sizes[l + 2]
-        progs.append(
-            ConvLevelProg(
-                K=lvl.K,
-                S=lvl.S,
-                in_size=in_size,
-                out_size=out_sz,
-                o_base=o_base,
-                o_step=o_step,
-                valid=sizes[l + 1],
-                pool=pool,
-                pool_out=pool_out,
-                pool_o_base=pool_ob,
-                pool_o_step=pool_os,
-                pool_valid=pool_valid,
-            )
-        )
-
-    tile0 = win_sizes[0]
-    lo0 = wins0[0][0] - levels[0].pad  # unpadded coords, typically negative
-    stride0 = wins1[0][0] - wins0[0][0]
-    # left pad so tile 0 starts at array index 0; right pad so the last tile fits
-    pad_lo = -lo0
-    last_end = lo0 + (alpha - 1) * stride0 + tile0
-    pad_hi = max(0, last_end - spec.input_size)
-    return progs, tile0, stride0, alpha, pad_lo, pad_hi
+from repro.core.fusion import FusionSpec
+from repro.core.program import (
+    VMEM_BUDGET_BYTES,
+    compile_program,
+    pick_out_region,
+)
+from .fused_conv import fused_pyramid_pallas
 
 
-def fused_pyramid_chain(
+@partial(
+    jax.jit,
+    static_argnames=(
+        "spec", "out_region", "relu", "end_skip", "interpret", "vmem_budget"
+    ),
+)
+def fused_pyramid(
     x: jnp.ndarray,
     weights: list,
     biases: list,
     *,
     spec: FusionSpec,
-    out_regions: list[int] | None = None,
+    out_region: int | None = None,
     relu: bool = True,
     end_skip: bool = True,
     interpret: bool = True,
-):
-    """Q>2 fusion (the paper's §4 VGG Q=4 experiment): consecutive 2-conv
-    chunks each run as one fused kernel; only chunk boundaries touch HBM —
-    the deployment granularity USEFUSE itself uses on its FPGA (Q=2 per
-    pyramid, pyramids chained).
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused Q-conv pyramid forward as a single kernel launch.
 
-    Returns (y, [skip maps per chunk]).
+    ``x``: (B, H, W, C) NHWC; ``weights[l]``: (K, K, Cin, Cout) and
+    ``biases[l]``: (Cout,) per conv level, in chain order.  ``out_region``
+    must tile the final output exactly; ``None`` picks the largest region
+    fitting the VMEM budget.  Returns ``(out, skip)`` with ``skip``:
+    (B, alpha, alpha, Q) int32 END-cascade flags (level 0 never skips).
     """
-    # split the level chain into chunks of 2 convs (+ their trailing pools)
-    chunks: list[list] = [[]]
-    convs_in_chunk = 0
-    for lvl in spec.levels:
-        if lvl.kind == "conv":
-            if convs_in_chunk == 2:
-                chunks.append([])
-                convs_in_chunk = 0
-            convs_in_chunk += 1
-        chunks[-1].append(lvl)
-    assert all(sum(l.kind == "conv" for l in ch) == 2 for ch in chunks), (
-        "chain requires an even conv count; pad with identity or use the"
-        " executor for odd Q"
+    if out_region is None:
+        out_region = pick_out_region(spec, vmem_budget=vmem_budget)
+        assert out_region is not None, (
+            "no output region fits VMEM; chunk via fused_pyramid_chain"
+        )
+    prog = compile_program(spec, out_region)
+    stream = prog.vmem_bytes() > vmem_budget
+    if stream:
+        vmem = prog.vmem_stream_bytes()
+        assert vmem <= vmem_budget, (
+            f"working set {vmem} exceeds VMEM even with weight streaming;"
+            " chunk via fused_pyramid_chain"
+        )
+    xp = jnp.pad(
+        x.astype(jnp.float32),
+        ((0, 0), (prog.pad_lo, prog.pad_hi), (prog.pad_lo, prog.pad_hi), (0, 0)),
     )
-    y = x
-    size = spec.input_size
-    skips = []
-    wi = 0
-    for ci, ch in enumerate(chunks):
-        sub = FusionSpec(levels=tuple(ch), input_size=size)
-        region = (
-            out_regions[ci]
-            if out_regions is not None
-            else sub.feature_sizes()[-1]
-        )
-        y, skip = fused_conv2(
-            y, weights[wi], biases[wi], weights[wi + 1], biases[wi + 1],
-            spec=sub, out_region=region, relu=relu, end_skip=end_skip,
-            interpret=interpret,
-        )
-        skips.append(skip)
-        size = sub.feature_sizes()[-1]
-        wi += 2
-    return y, skips
+    return fused_pyramid_pallas(
+        xp,
+        [w.astype(jnp.float32) for w in weights],
+        [b.astype(jnp.float32) for b in biases],
+        program=prog,
+        relu=relu,
+        end_skip=end_skip,
+        interpret=interpret,
+        stream_weights=stream,
+    )
 
 
-@partial(
-    jax.jit,
-    static_argnames=("spec", "out_region", "relu", "end_skip", "interpret"),
-)
 def fused_conv2(
     x: jnp.ndarray,
     w1: jnp.ndarray,
@@ -161,39 +101,131 @@ def fused_conv2(
     end_skip: bool = True,
     interpret: bool = True,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Fused 2-conv pyramid forward.  Returns (output map, skip map).
+    """Fused 2-conv pyramid forward — compatibility wrapper.
 
-    ``x``: (B, H, W, C) NHWC; weights (K, K, Cin, Cout), biases (Cout,).
-    ``skip``: (B, alpha, alpha) int32 — 1 where END tile-skip fired.
+    Returns (output map, skip map) with ``skip``: (B, alpha, alpha) int32 —
+    1 where the END cascade skipped the second conv (the historical
+    2-level-kernel semantics; new code should call :func:`fused_pyramid`).
     """
-    (p1, p2), tile0, stride0, alpha, pad_lo, pad_hi = _build_programs(
-        spec, out_region
-    )
-    xp = jnp.pad(
-        x.astype(jnp.float32),
-        ((0, 0), (pad_lo, pad_hi), (pad_lo, pad_hi), (0, 0)),
-    )
-    vmem = (
-        xp.shape[1] * xp.shape[2] * xp.shape[3]
-        + w1.size + b1.size + w2.size + b2.size
-        + tile0 * tile0 * xp.shape[3]
-        + p1.out_size ** 2 * w1.shape[-1]
-        + p2.out_size ** 2 * w2.shape[-1]
-    ) * 4
-    assert vmem < VMEM_BUDGET_BYTES, f"working set {vmem} exceeds VMEM"
-    return fused_conv2_pallas(
-        xp,
-        w1.astype(jnp.float32),
-        b1.astype(jnp.float32),
-        w2.astype(jnp.float32),
-        b2.astype(jnp.float32),
-        p1=p1,
-        p2=p2,
-        tile0=tile0,
-        stride0=stride0,
-        alpha=alpha,
+    out, skip = fused_pyramid(
+        x,
+        [w1, w2],
+        [b1, b2],
+        spec=spec,
         out_region=out_region,
         relu=relu,
         end_skip=end_skip,
         interpret=interpret,
     )
+    return out, skip[..., 1]
+
+
+def _conv_groups(spec: FusionSpec) -> list[list]:
+    """Split the level chain into [conv + trailing pools] groups — the
+    indivisible units of chunking (a pool executes as its conv's epilogue)."""
+    assert spec.levels and spec.levels[0].kind == "conv", (
+        "chain must start with a conv level"
+    )
+    groups: list[list] = []
+    for lvl in spec.levels:
+        if lvl.kind == "conv":
+            groups.append([lvl])
+        else:
+            groups[-1].append(lvl)
+    return groups
+
+
+def plan_chunks(
+    spec: FusionSpec,
+    *,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+    max_convs_per_chunk: int | None = None,
+) -> list[FusionSpec]:
+    """Greedy chunking: grow each chunk conv-group by conv-group until the
+    VMEM budget (or an explicit conv cap) forces a split.
+
+    A chain that fits the budget returns a single chunk — one kernel launch,
+    no intermediate HBM round-trip.  Odd conv counts are fine: a remainder
+    simply becomes a final Q=1/Q=3 chunk.  Raises ``ValueError`` when even a
+    lone conv group cannot fit the budget (chunking cannot help: a group is
+    the indivisible launch unit).
+    """
+    groups = _conv_groups(spec)
+    chunks: list[FusionSpec] = []
+    size = spec.input_size
+
+    def fits(levels: list) -> bool:
+        sub = FusionSpec(levels=tuple(levels), input_size=size)
+        return pick_out_region(sub, vmem_budget=vmem_budget) is not None
+
+    cur: list = []
+    for g in groups:
+        if cur:
+            convs = sum(l.kind == "conv" for l in cur)
+            capped = max_convs_per_chunk is not None and convs >= max_convs_per_chunk
+            if capped or not fits(cur + g):
+                chunks.append(FusionSpec(levels=tuple(cur), input_size=size))
+                size = chunks[-1].feature_sizes()[-1]
+                cur = []
+        if not cur and not fits(g):
+            name = g[0].name or f"conv K={g[0].K} {g[0].n_in}->{g[0].n_out}"
+            raise ValueError(
+                f"conv group [{name}] does not fit the {vmem_budget}-byte"
+                " VMEM budget even alone (streamed); chunking cannot help"
+            )
+        cur = cur + g
+    chunks.append(FusionSpec(levels=tuple(cur), input_size=size))
+    return chunks
+
+
+def fused_pyramid_chain(
+    x: jnp.ndarray,
+    weights: list,
+    biases: list,
+    *,
+    spec: FusionSpec,
+    out_regions: list[int] | None = None,
+    relu: bool = True,
+    end_skip: bool = True,
+    interpret: bool = True,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+    max_convs_per_chunk: int | None = None,
+):
+    """Execute a fusion chain in as few kernel launches as VMEM allows.
+
+    With the variadic kernel a chain that fits the budget runs as **one**
+    launch (the paper's §4 VGG Q=4 experiment no longer round-trips the
+    level-2 feature map through HBM); larger chains split at conv-group
+    boundaries, and only those chunk boundaries touch HBM.  Pass
+    ``max_convs_per_chunk=2`` to reproduce the historical 2+2 chained path
+    (USEFUSE's own FPGA granularity, §4.4).
+
+    Returns ``(y, skips)`` — ``skips[c]`` is chunk ``c``'s (B, alpha, alpha,
+    Q_c) END-cascade flag map.
+    """
+    chunks = plan_chunks(
+        spec, vmem_budget=vmem_budget, max_convs_per_chunk=max_convs_per_chunk
+    )
+    if out_regions is not None:
+        assert len(out_regions) == len(chunks), (
+            f"{len(out_regions)} out_regions for {len(chunks)} chunks"
+        )
+    y = x
+    skips = []
+    wi = 0
+    for ci, sub in enumerate(chunks):
+        q = sub.q_convs
+        y, skip = fused_pyramid(
+            y,
+            list(weights[wi : wi + q]),
+            list(biases[wi : wi + q]),
+            spec=sub,
+            out_region=out_regions[ci] if out_regions is not None else None,
+            relu=relu,
+            end_skip=end_skip,
+            interpret=interpret,
+            vmem_budget=vmem_budget,
+        )
+        skips.append(skip)
+        wi += q
+    return y, skips

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the fused 2-conv pyramid kernel: the monolithic
+"""Pure-jnp oracles for the fused pyramid kernel: the monolithic
 layer-by-layer execution from :mod:`repro.core.executor`."""
 
 from __future__ import annotations
@@ -7,6 +7,19 @@ import jax.numpy as jnp
 
 from repro.core.executor import PyramidParams, reference_forward
 from repro.core.fusion import FusionSpec
+
+
+def fused_pyramid_ref(
+    x: jnp.ndarray,
+    spec: FusionSpec,
+    weights: list,
+    biases: list,
+    *,
+    relu: bool = True,
+) -> jnp.ndarray:
+    """Oracle for :func:`~repro.kernels.fused_conv.ops.fused_pyramid`."""
+    params = PyramidParams(weights=list(weights), biases=list(biases))
+    return reference_forward(x, spec, params, relu=relu)
 
 
 def fused_conv2_ref(
@@ -19,5 +32,4 @@ def fused_conv2_ref(
     *,
     relu: bool = True,
 ) -> jnp.ndarray:
-    params = PyramidParams(weights=[w1, w2], biases=[b1, b2])
-    return reference_forward(x, spec, params, relu=relu)
+    return fused_pyramid_ref(x, spec, [w1, w2], [b1, b2], relu=relu)

@@ -17,7 +17,7 @@ from jax.sharding import NamedSharding, PartitionSpec  # noqa: E402
 
 from repro.configs import ARCH_IDS, get_config  # noqa: E402
 from repro.configs.shapes import SHAPES, cell_supported  # noqa: E402
-from repro.launch.hloanalysis import analyze_hlo  # noqa: E402
+from repro.launch.hloanalysis import analyze_hlo, xla_cost_dict  # noqa: E402
 from repro.launch.mesh import make_production_mesh, chips  # noqa: E402
 from repro.launch.steps import (  # noqa: E402
     input_specs,
@@ -181,7 +181,7 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, *, analyze=True):
         )
         rec["memory"] = per_dev
         rec["fits_hbm"] = bool(per_dev["total_bytes"] < HBM_PER_CHIP)
-        ca = compiled.cost_analysis()
+        ca = xla_cost_dict(compiled)
         rec["xla_cost_analysis_flops_once_per_loop"] = float(ca.get("flops", 0.0))
         if analyze:
             cost = analyze_hlo(compiled.as_text())

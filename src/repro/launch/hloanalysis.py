@@ -78,6 +78,15 @@ class HloCost:
     n_collectives: int = 0
 
 
+def xla_cost_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized across jax versions (older
+    releases return ``[dict]`` per device program, newer a plain dict)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
 def _parse_computations(text: str) -> tuple[dict[str, Computation], str]:
     comps: dict[str, Computation] = {}
     entry = None
@@ -190,7 +199,6 @@ def analyze_hlo(text: str) -> HloCost:
             name, rhs = dm.groups()
             # ---- dot flops ----
             if " dot(" in rhs or rhs.startswith("dot("):
-                opm = re.search(r"dot\(%?([\w.\-]+)", rhs)
                 cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
                 res_elems = 1
                 sm = _SHAPE_RE.match(rhs)
@@ -198,9 +206,19 @@ def analyze_hlo(text: str) -> HloCost:
                     for d in sm.group(2).split(","):
                         if d:
                             res_elems *= int(d)
+                # lhs dims: newer HLO prints operands with inline shapes
+                # (``dot(f32[64,128]{1,0} %op, ...)``); older dialects print
+                # bare operand names resolved via the def table
+                shape = None
+                ism = re.search(r"dot\(([a-z0-9]+)\[([\d,]*)\]", rhs)
+                if ism and ism.group(1) in _DTYPE_BYTES:
+                    shape = [int(d) for d in ism.group(2).split(",") if d]
+                else:
+                    opm = re.search(r"dot\(%?([\w.\-]+)", rhs)
+                    if opm and opm.group(1) in comp.dims:
+                        shape = comp.dims[opm.group(1)]
                 csize = 1
-                if opm and cm and opm.group(1) in comp.dims:
-                    shape = comp.dims[opm.group(1)]
+                if shape and cm:
                     for idx in cm.group(1).split(","):
                         if idx:
                             csize *= shape[int(idx)]

@@ -162,9 +162,10 @@ class TestFusedConvKernel:
 
 
 class TestFusedPyramidChain:
-    def test_vgg_q4_chain(self):
-        """The paper's §4 VGG experiment: 4 convs fused as two chained
-        2-conv kernels; only the chunk boundary touches HBM."""
+    def test_vgg_q4_chained_matches_single_launch(self):
+        """The historical 2+2 chained path (USEFUSE's FPGA granularity,
+        forced via ``max_convs_per_chunk=2``) and the new single-launch
+        Q=4 path must both match the monolithic reference."""
         from repro.core.cnn_models import VGG_FUSION
         from repro.core.executor import reference_forward, PyramidParams
         from repro.kernels.fused_conv.ops import fused_pyramid_chain
@@ -175,8 +176,13 @@ class TestFusedPyramidChain:
         p = init_pyramid_params(spec, KEY)
         x = jax.random.normal(jax.random.PRNGKey(5), (1, 32, 32, 3))
         y, skips = fused_pyramid_chain(
-            x, p.weights, p.biases, spec=spec, out_regions=[8, 4]
+            x, p.weights, p.biases, spec=spec, out_regions=[8, 4],
+            max_convs_per_chunk=2,
         )
         ref = reference_forward(x, spec, PyramidParams(p.weights, p.biases))
         np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-3)
         assert len(skips) == 2
+
+        y1, skips1 = fused_pyramid_chain(x, p.weights, p.biases, spec=spec)
+        assert len(skips1) == 1, "VGG Q=4 must fit one kernel launch"
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(ref), atol=1e-3)

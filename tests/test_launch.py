@@ -24,7 +24,10 @@ def test_dryrun_cell_subprocess(arch, shape):
             [sys.executable, "-m", "repro.launch.dryrun",
              "--arch", arch, "--shape", shape, "--mesh", "single",
              "--out", str(out)],
-            env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"},
+            # JAX_PLATFORMS=cpu: the dry-run compiles on forced host devices;
+            # without it jax probes for TPU hardware and hangs on TPU images
+            env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+                 "JAX_PLATFORMS": "cpu"},
             capture_output=True, text=True, timeout=420, cwd=str(REPO),
         )
         assert proc.returncode == 0, proc.stdout + proc.stderr
