@@ -1,19 +1,116 @@
-"""Benchmark harness: one section per paper table/figure.
+"""Benchmark harness: one section per paper table/figure, plus the
+whole-network partition comparison, with machine-readable output.
 
-``PYTHONPATH=src python -m benchmarks.run``  prints ``name,...`` CSV rows:
+``PYTHONPATH=src python -m benchmarks.run``  prints ``name,...`` CSV rows and
+writes ``BENCH_pyramid.json`` (``--out`` to relocate) holding the per-workload
+HBM bytes, wall-clock numbers, END skip fractions, and the auto-partition vs
+paper-fusion vs layer-by-layer comparison for every zoo model — the rows the
+perf trajectory tracks.
+
+Sections:
 
 * Tables 1-4 — DS-1/DS-2 cycle-model durations vs the paper (paper_tables)
 * Figs 10-11 — performance vs operational intensity (intensity)
 * Figs 12-14 — END detection / energy / ResNet-18 cycle savings (end_savings)
+* Whole-network partitions — modeled HBM/latency of auto vs baselines
 * Kernel wall-time sanity (interpret mode; TPU timing is the dry-run's job)
+
+``--dry-run`` keeps only the analytic sections (no kernel launches, no
+digit-level simulation) so the CI smoke job finishes in seconds on CPU.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
+FREQ_MHZ = 100.0
 
-def _kernel_micro():
+
+def _partition_comparison(csv=print) -> dict:
+    """Auto vs paper vs layer-by-layer for every zoo model: modeled HBM
+    traffic and DS-1 latency of all pyramid launches (batch 1)."""
+    from repro.net.graph import MODELS
+    from repro.net.partition import (
+        auto_partition,
+        layerwise_partition,
+        paper_partition,
+    )
+
+    out: dict = {}
+    csv("partition,model,strategy,hbm_bytes,launches,modeled_latency_us")
+    for model in MODELS:
+        graph = MODELS[model]()
+        rows = {}
+        for strategy, plan in (
+            ("auto", auto_partition(graph)),
+            ("paper", paper_partition(graph)),
+            ("layerwise", layerwise_partition(graph)),
+        ):
+            lat_us = plan.modeled_cycles() / FREQ_MHZ
+            rows[strategy] = {
+                "hbm_bytes": plan.hbm_bytes(),
+                "launches": plan.n_launches(),
+                "modeled_latency_us": lat_us,
+                "pyramids": [
+                    {
+                        "nodes": list(p.node_names),
+                        "q_convs": p.q_convs,
+                        "out_region": p.launch.out_region,
+                        "streamed": p.launch.streamed,
+                        "hbm_bytes": p.launch.hbm_bytes(),
+                    }
+                    for p in plan.pyramids
+                ],
+            }
+            csv(
+                f"partition,{model},{strategy},{rows[strategy]['hbm_bytes']},"
+                f"{rows[strategy]['launches']},{lat_us:.1f}"
+            )
+        auto, layer = rows["auto"]["hbm_bytes"], rows["layerwise"]["hbm_bytes"]
+        paper = rows["paper"]["hbm_bytes"]
+        csv(
+            f"partition_savings,{model},auto_vs_layerwise,"
+            f"{(layer - auto) / layer:.1%},auto_vs_paper,"
+            f"{(paper - auto) / paper:.1%}"
+        )
+        out[model] = rows
+    return out
+
+
+def _lenet_e2e(csv=print) -> dict:
+    """End-to-end LeNet-5 through run_network: wall clock + skip fractions
+    (the only zoo model cheap enough to execute at paper scale in interpret
+    mode)."""
+    import jax
+
+    from repro.net.graph import lenet5
+    from repro.net.partition import auto_partition
+    from repro.net.runner import init_network_params, run_network, skip_fractions
+
+    graph = lenet5()
+    plan = auto_partition(graph, batch=4)
+    params = init_network_params(graph, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 32, 1))
+    logits, skips = run_network(x, params, plan=plan)  # warm the jit cache
+    jax.block_until_ready(logits)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        logits, skips = run_network(x, params, plan=plan)
+        jax.block_until_ready(logits)
+    dt_ms = (time.perf_counter() - t0) / 3 * 1e3
+    frac = skip_fractions(skips)
+    csv(f"lenet_e2e,auto_plan,interpret,{dt_ms:.1f},ms_per_batch4")
+    return {
+        "hbm_bytes": plan.hbm_bytes(),
+        "wallclock_ms": dt_ms,
+        "batch": 4,
+        "skip_fractions": frac,
+    }
+
+
+def _kernel_micro(csv=print) -> dict:
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -23,17 +120,19 @@ def _kernel_micro():
     from repro.kernels.fused_conv.ops import fused_conv2
     from repro.kernels.online_sop.ops import online_sop_end
 
+    out = {}
     params = init_pyramid_params(LENET5_FUSION, jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32, 1))
     args = (x, params.weights[0], params.biases[0], params.weights[1],
             params.biases[1])
-    out, _ = fused_conv2(*args, spec=LENET5_FUSION, out_region=1)
+    res, _ = fused_conv2(*args, spec=LENET5_FUSION, out_region=1)
     t0 = time.perf_counter()
     for _ in range(3):
-        out, _ = fused_conv2(*args, spec=LENET5_FUSION, out_region=1)
-        jax.block_until_ready(out)
+        res, _ = fused_conv2(*args, spec=LENET5_FUSION, out_region=1)
+        jax.block_until_ready(res)
     dt = (time.perf_counter() - t0) / 3
-    print(f"kernel_fused_conv_lenet,interpret,{dt * 1e6:.0f},us_per_call")
+    csv(f"kernel_fused_conv_lenet,interpret,{dt * 1e6:.0f},us_per_call")
+    out["fused_conv_lenet_us"] = dt * 1e6
 
     xs = jnp.asarray(np.random.default_rng(0).uniform(-0.03, 0.03, (512, 25)),
                      jnp.float32)
@@ -45,10 +144,12 @@ def _kernel_micro():
         s, _, _ = online_sop_end(xs, y, 16)
         jax.block_until_ready(s)
     dt = (time.perf_counter() - t0) / 3
-    print(f"kernel_online_sop_512x25,interpret,{dt * 1e6:.0f},us_per_call")
+    csv(f"kernel_online_sop_512x25,interpret,{dt * 1e6:.0f},us_per_call")
+    out["online_sop_512x25_us"] = dt * 1e6
+    return out
 
 
-def _vgg_q4_fusion_delta():
+def _vgg_q4_fusion_delta(csv=print) -> dict:
     """Single-kernel VGG Q=4 (the variadic pyramid) vs the historical 2+2
     chained path: analytic HBM traffic at paper scale (224^2) and interpret-
     mode wall clock at reduced scale.  The chained path round-trips the
@@ -61,6 +162,7 @@ def _vgg_q4_fusion_delta():
     from repro.core.program import compile_program, pick_out_region
     from repro.kernels.fused_conv.ops import fused_pyramid_chain, plan_chunks
 
+    out: dict = {}
     modes = [("single", {}), ("chained2", {"max_convs_per_chunk": 2})]
     traffic = {}
     for label, kwargs in modes:
@@ -70,12 +172,13 @@ def _vgg_q4_fusion_delta():
             prog = compile_program(ch, pick_out_region(ch))
             total += prog.hbm_bytes(1)
         traffic[label] = total
-        print(
+        out[f"hbm_bytes_{label}"] = total
+        csv(
             f"vgg_q4_hbm_traffic,{label},{len(chunks)}_launches,"
             f"{total},bytes"
         )
     saved = traffic["chained2"] - traffic["single"]
-    print(
+    csv(
         f"vgg_q4_hbm_traffic_delta,single_vs_chained2,{saved},bytes_saved,"
         f"{saved / traffic['chained2']:.1%},of_chained"
     )
@@ -96,28 +199,52 @@ def _vgg_q4_fusion_delta():
             )
             jax.block_until_ready(y)
         wall[label] = (time.perf_counter() - t0) / 3
-        print(f"vgg_q4_wallclock,{label},interpret,{wall[label] * 1e3:.1f},ms_per_call")
-    print(
+        out[f"wallclock_ms_{label}"] = wall[label] * 1e3
+        csv(f"vgg_q4_wallclock,{label},interpret,{wall[label] * 1e3:.1f},ms_per_call")
+    csv(
         f"vgg_q4_wallclock_delta,single_vs_chained2,"
         f"{(wall['chained2'] - wall['single']) * 1e3:.1f},ms_saved_per_call"
     )
+    return out
 
 
-def main() -> None:
-    from benchmarks import end_savings, intensity, paper_tables
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="analytic sections only: no kernel launches, no "
+                         "digit-level simulation (CI smoke mode)")
+    ap.add_argument("--out", default="BENCH_pyramid.json",
+                    help="where to write the machine-readable results")
+    args = ap.parse_args(argv)
+
+    from benchmarks import intensity, paper_tables
+
+    bench: dict = {"dry_run": args.dry_run, "workloads": {}}
 
     print("== Tables 1-4: cycle models vs paper ==")
     paper_tables.run()
     print("== Figs 10-11: operational intensity ==")
     intensity.run()
-    print("== Figs 12-14: END savings ==")
-    end_savings.run()
-    print("== kernels (interpret-mode wall time; TPU perf comes from the"
-          " dry-run roofline) ==")
-    _kernel_micro()
-    print("== VGG Q=4: single-kernel fusion vs 2+2 chained (HBM traffic +"
-          " latency) ==")
-    _vgg_q4_fusion_delta()
+    print("== whole-network partitions: auto vs paper vs layer-by-layer ==")
+    bench["partition"] = _partition_comparison()
+
+    if not args.dry_run:
+        from benchmarks import end_savings
+
+        print("== Figs 12-14: END savings ==")
+        end_savings.run()
+        print("== LeNet-5 end-to-end (run_network, interpret mode) ==")
+        bench["workloads"]["lenet_e2e"] = _lenet_e2e()
+        print("== kernels (interpret-mode wall time; TPU perf comes from the"
+              " dry-run roofline) ==")
+        bench["workloads"]["kernel_micro"] = _kernel_micro()
+        print("== VGG Q=4: single-kernel fusion vs 2+2 chained (HBM traffic +"
+              " latency) ==")
+        bench["workloads"]["vgg_q4"] = _vgg_q4_fusion_delta()
+
+    with open(args.out, "w") as f:
+        json.dump(bench, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out}")
 
 
 if __name__ == "__main__":

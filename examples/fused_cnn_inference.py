@@ -1,66 +1,92 @@
-"""Fused CNN inference with the Pallas kernel (TPU-target, interpret on CPU).
+"""End-to-end fused CNN inference with machine-chosen fusion boundaries.
 
-Runs AlexNet's first fused block (conv1+pool1+conv2+pool2) through the
-fused_conv Pallas kernel — the whole pyramid executes per tile with the
-intermediate feature maps resident in VMEM — and verifies against the
-monolithic reference.  Also demonstrates the END tile-skip cascade firing on
-spatially sparse input, and VGG blocks 1-2 (Q=4 convs + 2 pools) running as
-a *single* variadic kernel launch: no intermediate map ever touches HBM.
+Builds a zoo model as a graph (`repro.net.graph`), lets the memory-aware
+auto-partitioner pick the pyramid cuts (`repro.net.partition`), executes the
+whole network through the fused Pallas kernels (`repro.net.runner`) and
+verifies the logits against the monolithic JAX reference.  Also demonstrates
+the END tile-skip cascade firing on spatially sparse input.
 
-Run:  PYTHONPATH=src python examples/fused_cnn_inference.py
+Run:  PYTHONPATH=src python examples/fused_cnn_inference.py --model lenet
+      PYTHONPATH=src python examples/fused_cnn_inference.py --model resnet18
+
+Big models default to reduced spatial scale so interpret mode (CPU) stays
+quick; pass --input-size to override (the partitioner and kernels are the
+same code that handles paper scale — see benchmarks/run.py for the analytic
+224^2 numbers).
 """
 
-import dataclasses
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.cnn_models import ALEXNET_FUSION, VGG_FUSION
-from repro.core.executor import init_pyramid_params
-from repro.kernels.fused_conv.ops import fused_conv2, fused_pyramid
-from repro.kernels.fused_conv.ref import fused_conv2_ref, fused_pyramid_ref
-
-spec = ALEXNET_FUSION
-params = init_pyramid_params(spec, jax.random.PRNGKey(0))
-x = jax.random.normal(jax.random.PRNGKey(1), (1, 227, 227, 3))
-
-t0 = time.time()
-out, skip = fused_conv2(
-    x, params.weights[0], params.biases[0], params.weights[1], params.biases[1],
-    spec=spec, out_region=1,
+from repro.net.graph import MODELS, infer_shapes
+from repro.net.partition import auto_partition, layerwise_partition
+from repro.net.runner import (
+    init_network_params,
+    reference_network,
+    run_network,
+    skip_fractions,
 )
-print(f"fused kernel: out {out.shape} in {time.time() - t0:.1f}s (interpret mode)")
-ref = fused_conv2_ref(
-    x, spec, params.weights[0], params.biases[0], params.weights[1], params.biases[1]
-)
-print("max err vs monolithic reference:", float(jnp.abs(out - ref).max()))
-print("END tile-skips on dense input:", int(skip.sum()), "/", skip.size)
 
-# sparse input: most tiles dead after ReLU -> kernel skips their conv2
-xs = jnp.zeros_like(x).at[:, :40, :40, :].set(
-    jax.random.normal(jax.random.PRNGKey(2), (1, 40, 40, 3)) * 3
-)
-b1 = params.biases[0] - 0.3
-out2, skip2 = fused_conv2(
-    xs, params.weights[0], b1, params.weights[1], params.biases[1],
-    spec=spec, out_region=1,
-)
-ref2 = fused_conv2_ref(xs, spec, params.weights[0], b1, params.weights[1],
-                       params.biases[1])
-print("sparse input: END skipped", int(skip2.sum()), "/", skip2.size,
-      "tiles; err", float(jnp.abs(out2 - ref2).max()))
+# interpret-friendly default scales (paper scale for LeNet only)
+DEFAULT_SIZE = {"lenet": 32, "alexnet": 67, "vgg16": 32, "resnet18": 32}
 
-# --- VGG blocks 1-2 as ONE kernel launch (Q=4 fusion pyramid) --------------
-# Reduced spatial size keeps interpret mode quick; the level structure (four
-# 3x3 convs + two 2x2 pools) is VGG's.  skip3 carries one END-cascade flag
-# per conv level per tile.
-vgg = dataclasses.replace(VGG_FUSION, input_size=32)
-vp = init_pyramid_params(vgg, jax.random.PRNGKey(3))
-xv = jax.random.normal(jax.random.PRNGKey(4), (1, 32, 32, 3))
-t0 = time.time()
-out3, skip3 = fused_pyramid(xv, vp.weights, vp.biases, spec=vgg, out_region=4)
-print(f"VGG Q=4 single launch: out {out3.shape} skip {skip3.shape} "
-      f"in {time.time() - t0:.1f}s (interpret mode)")
-ref3 = fused_pyramid_ref(xv, vgg, vp.weights, vp.biases)
-print("max err vs monolithic reference:", float(jnp.abs(out3 - ref3).max()))
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", choices=sorted(MODELS), default="lenet")
+    ap.add_argument("--input-size", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=2)
+    args = ap.parse_args()
+
+    size = args.input_size or DEFAULT_SIZE[args.model]
+    graph = MODELS[args.model](input_size=size, num_classes=10)
+    shapes = infer_shapes(graph)
+    print(f"{graph.name}: {len(graph.nodes)} nodes, input {size}x{size}, "
+          f"logits {shapes[graph.output.name].channels}")
+
+    plan = auto_partition(graph, batch=args.batch)
+    layer = layerwise_partition(graph, batch=args.batch)
+    print(plan.summary())
+    print(f"layer-by-layer baseline: {layer.hbm_bytes():,}B over "
+          f"{layer.n_launches()} launches -> auto saves "
+          f"{1 - plan.hbm_bytes() / layer.hbm_bytes():.1%} modeled HBM traffic")
+
+    params = init_network_params(graph, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (args.batch, size, size,
+                                                  graph.in_channels))
+    t0 = time.time()
+    logits, skips = run_network(x, params, plan=plan)
+    jax.block_until_ready(logits)
+    print(f"run_network: logits {logits.shape} in {time.time() - t0:.1f}s "
+          "(interpret mode, includes compile)")
+    ref = reference_network(x, graph, params)
+    print("max |err| vs monolithic reference:", float(jnp.abs(logits - ref).max()))
+
+    # sparse input: most tiles die after level 0, the END cascade skips the
+    # deeper convs of each pyramid.  Re-partition with the paper's
+    # smallest-region preference: maximal tile grids even at reduced scale,
+    # so the per-tile skips become visible.
+    tight = auto_partition(graph, batch=args.batch, prefer_region="smallest")
+    blob = max(4, size // 4)
+    xs = jnp.zeros_like(x).at[:, :blob, :blob, :].set(
+        jax.random.normal(jax.random.PRNGKey(2),
+                          (args.batch, blob, blob, graph.in_channels)) * 3
+    )
+    sparse_params = {
+        k: (w, b - 0.3) if graph.node(k).op == "conv" else (w, b)
+        for k, (w, b) in params.items()
+    }
+    logits_s, skips_s = run_network(xs, sparse_params, plan=tight)
+    ref_s = reference_network(xs, graph, sparse_params)
+    print("sparse input: max |err|", float(jnp.abs(logits_s - ref_s).max()))
+    for name, frac in skip_fractions(skips_s).items():
+        if any(f > 0 for f in frac):
+            print(f"  END skips {name}: "
+                  + ", ".join(f"L{i}={f:.0%}" for i, f in enumerate(frac)))
+
+
+if __name__ == "__main__":
+    main()

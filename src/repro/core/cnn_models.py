@@ -1,91 +1,59 @@
-"""CNN workload definitions used by the paper (§4.1).
+"""CNN workload definitions used by the paper (§4.1), derived from the
+graph IR.
 
-LeNet-5, AlexNet, VGG-16 and ResNet-18 convolution/pool stacks, expressed as
-:class:`~repro.core.fusion.FusedLevel` chains, plus the paper's fusion
-choices: LeNet-5 / AlexNet fuse the first two conv layers (+ their pools);
-VGG-16 fuses the first two blocks (four convs + two pools); ResNet-18 fuses
-consecutive conv pairs inside each residual block (first conv excluded).
+The full networks live as graphs in :mod:`repro.net.graph` (the model zoo);
+this module derives the paper's *hand-picked fusion choices* from them:
+LeNet-5 / AlexNet fuse the first two conv layers (+ their pools); VGG-16
+fuses the first two blocks (four convs + two pools); ResNet-18 fuses the
+conv pair inside each residual block (stem conv excluded).  The raw tuple
+tables that used to define these stacks are gone — the graphs are the single
+source of truth, and the specs here are prefixes/segments of them.
 """
 
 from __future__ import annotations
 
 from .fusion import FusedLevel, FusionSpec
 
+
+def _zoo():
+    # deferred: repro.net.graph imports repro.core.fusion at module load
+    from repro.net import graph
+
+    return graph
+
+
 # ---------------------------------------------------------------------------
-# LeNet-5 (32x32x1 input) — paper's running example (§3.3.1)
+# Paper fusion groups, derived from the zoo graphs
 # ---------------------------------------------------------------------------
 
 LENET5_INPUT = 32
-LENET5_LEVELS = (
-    FusedLevel("conv", K=5, S=1, pad=0, n_in=1, n_out=6, name="CL1"),
-    FusedLevel("pool", K=2, S=2, pad=0, n_in=6, n_out=6, name="MPL1"),
-    FusedLevel("conv", K=5, S=1, pad=0, n_in=6, n_out=16, name="CL2"),
-    FusedLevel("pool", K=2, S=2, pad=0, n_in=16, n_out=16, name="MPL2"),
-)
-LENET5_FUSION = FusionSpec(levels=LENET5_LEVELS, input_size=LENET5_INPUT)
-
-# ---------------------------------------------------------------------------
-# AlexNet (227x227x3 input) — first two conv layers + pools fused
-# ---------------------------------------------------------------------------
+LENET5_FUSION = _zoo().backbone_prefix(_zoo().lenet5(LENET5_INPUT), 2)
+LENET5_LEVELS = LENET5_FUSION.levels
 
 ALEXNET_INPUT = 227
-ALEXNET_LEVELS = (
-    FusedLevel("conv", K=11, S=4, pad=0, n_in=3, n_out=96, name="CONV1"),
-    FusedLevel("pool", K=3, S=2, pad=0, n_in=96, n_out=96, name="POOL1"),
-    FusedLevel("conv", K=5, S=1, pad=2, n_in=96, n_out=256, name="CONV2"),
-    FusedLevel("pool", K=3, S=2, pad=0, n_in=256, n_out=256, name="POOL2"),
-)
-ALEXNET_FUSION = FusionSpec(levels=ALEXNET_LEVELS, input_size=ALEXNET_INPUT)
-
-# ---------------------------------------------------------------------------
-# VGG-16 (224x224x3) — blocks 1-2 (four convs, two pools) fused
-# ---------------------------------------------------------------------------
+ALEXNET_FUSION = _zoo().backbone_prefix(_zoo().alexnet(ALEXNET_INPUT), 2)
+ALEXNET_LEVELS = ALEXNET_FUSION.levels
 
 VGG_INPUT = 224
-VGG_BLOCK12_LEVELS = (
-    FusedLevel("conv", K=3, S=1, pad=1, n_in=3, n_out=64, name="CONV1"),
-    FusedLevel("conv", K=3, S=1, pad=1, n_in=64, n_out=64, name="CONV2"),
-    FusedLevel("pool", K=2, S=2, pad=0, n_in=64, n_out=64, name="POOL1"),
-    FusedLevel("conv", K=3, S=1, pad=1, n_in=64, n_out=128, name="CONV3"),
-    FusedLevel("conv", K=3, S=1, pad=1, n_in=128, n_out=128, name="CONV4"),
-    FusedLevel("pool", K=2, S=2, pad=0, n_in=128, n_out=128, name="POOL2"),
-)
-VGG_FUSION = FusionSpec(levels=VGG_BLOCK12_LEVELS, input_size=VGG_INPUT)
+VGG_FUSION = _zoo().backbone_prefix(_zoo().vgg16(VGG_INPUT), 4)
+VGG_BLOCK12_LEVELS = VGG_FUSION.levels
 
-# Full VGG-16 conv stack (for end-to-end §4.4 comparisons).
-VGG16_ALL_CONVS = (
-    # (K, S, pad, n_in, n_out, ifm)
-    (3, 1, 1, 3, 64, 224),
-    (3, 1, 1, 64, 64, 224),
-    (3, 1, 1, 64, 128, 112),
-    (3, 1, 1, 128, 128, 112),
-    (3, 1, 1, 128, 256, 56),
-    (3, 1, 1, 256, 256, 56),
-    (3, 1, 1, 256, 256, 56),
-    (3, 1, 1, 256, 512, 28),
-    (3, 1, 1, 512, 512, 28),
-    (3, 1, 1, 512, 512, 28),
-    (3, 1, 1, 512, 512, 14),
-    (3, 1, 1, 512, 512, 14),
-    (3, 1, 1, 512, 512, 14),
-)
 
 # ---------------------------------------------------------------------------
 # ResNet-18 (224x224x3) — §4.3 END experiment: fuse conv pairs per block
 # ---------------------------------------------------------------------------
 
-# (n_in, n_out, ifm, stride_of_first_conv) per residual block; two 3x3 convs
-# each.  conv1 (7x7/2) excluded from fusion per the paper.
-RESNET18_BLOCKS = (
-    (64, 64, 56, 1),
-    (64, 64, 56, 1),
-    (64, 128, 56, 2),
-    (128, 128, 28, 1),
-    (128, 256, 28, 2),
-    (256, 256, 14, 1),
-    (256, 512, 14, 2),
-    (512, 512, 7, 1),
-)
+
+def resnet18_fusions(input_size: int = 224) -> list[FusionSpec]:
+    """Fusion pyramid per residual block (convA -> convB), derived from the
+    ResNet-18 graph's body segments; stem and projection shortcuts excluded
+    per the paper."""
+    g = _zoo().resnet18(input_size)
+    return [
+        seg.spec()
+        for seg in _zoo().fusable_segments(g)
+        if seg.nodes[0].name.endswith("_convA")
+    ]
 
 
 def resnet18_block_fusion(n_in: int, n_out: int, ifm: int, s1: int) -> FusionSpec:
@@ -97,10 +65,6 @@ def resnet18_block_fusion(n_in: int, n_out: int, ifm: int, s1: int) -> FusionSpe
         ),
         input_size=ifm,
     )
-
-
-def resnet18_fusions() -> list[FusionSpec]:
-    return [resnet18_block_fusion(*blk) for blk in RESNET18_BLOCKS]
 
 
 # ---------------------------------------------------------------------------

@@ -61,10 +61,36 @@ class FusedLevel:
 
 @dataclass(frozen=True)
 class FusionSpec:
-    """A chain of levels to fuse plus the network input size."""
+    """A chain of levels to fuse plus the network input size.
+
+    Construction validates the channel chain (level *l+1* must consume what
+    level *l* produces; pools preserve channels) so that a malformed chain
+    fails here with a named level instead of deep inside the kernel wrapper
+    with a shape error.
+    """
 
     levels: tuple[FusedLevel, ...]
     input_size: int  # unpadded spatial size of the first level's input
+
+    def __post_init__(self) -> None:
+        if not self.levels:
+            raise ValueError("FusionSpec needs at least one level")
+        carried: int | None = None
+        for l, lvl in enumerate(self.levels):
+            label = lvl.name or f"level {l} ({lvl.kind})"
+            if lvl.kind not in ("conv", "pool"):
+                raise ValueError(f"{label}: unknown level kind {lvl.kind!r}")
+            if lvl.kind == "pool" and lvl.n_in != lvl.n_out:
+                raise ValueError(
+                    f"{label}: pools preserve channels, got "
+                    f"n_in={lvl.n_in} != n_out={lvl.n_out}"
+                )
+            if carried is not None and lvl.n_in != carried:
+                raise ValueError(
+                    f"{label}: n_in={lvl.n_in} does not chain with the "
+                    f"{carried} channels produced by the previous level"
+                )
+            carried = lvl.n_out
 
     @property
     def q_convs(self) -> int:

@@ -309,6 +309,75 @@ def compile_program(spec: FusionSpec, out_region: int) -> TileProgram:
     )
 
 
+@dataclass(frozen=True)
+class LaunchPlan:
+    """A costed, VMEM-feasible single-launch configuration of one pyramid.
+
+    The plan-costing hook consumed by the auto-partitioner
+    (:mod:`repro.net.partition`) and the kernel wrapper
+    (:mod:`repro.kernels.fused_conv.ops`): region choice *and* weight regime
+    (resident vs streamed) are decided here, once, so planner cost and
+    launched kernel can never disagree.
+    """
+
+    program: TileProgram
+    streamed: bool
+
+    @property
+    def spec(self) -> FusionSpec:
+        return self.program.spec
+
+    @property
+    def out_region(self) -> int:
+        return self.program.out_region
+
+    def vmem_bytes(self) -> int:
+        if self.streamed:
+            return self.program.vmem_stream_bytes()
+        return self.program.vmem_bytes()
+
+    def hbm_bytes(self, batch: int = 1) -> int:
+        return self.program.hbm_bytes(batch, streamed=self.streamed)
+
+    def modeled_cycles(self, batch: int = 1) -> int:
+        """DS-1 cycle model (Eq. 3) over the launch's uniform-stride grid —
+        the latency tiebreaker of the partitioner's dynamic program."""
+        from .cycle_model import ds1_cycles_per_movement
+
+        return batch * self.program.alpha ** 2 * ds1_cycles_per_movement(self.spec)
+
+
+def plan_launch(
+    spec: FusionSpec,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+    *,
+    allow_stream: bool = True,
+    prefer_region: str = "largest",
+) -> LaunchPlan | None:
+    """Pick the launch configuration for one pyramid: an exactly-tiling
+    output region whose program fits the VMEM budget, preferring
+    fully-resident weights over per-level streaming (which re-reads weights
+    once per grid cell).  ``prefer_region="largest"`` (default) minimizes
+    grid overhead; ``"smallest"`` is the paper's smallest-tile preference —
+    maximal tile grids, i.e. END skipping at its finest granularity.
+    Returns ``None`` when no single launch fits."""
+    assert prefer_region in ("largest", "smallest")
+    out_size = spec.feature_sizes()[-1]
+    regions = [r for r in range(out_size, 0, -1) if out_size % r == 0]
+    if prefer_region == "smallest":
+        regions.reverse()
+    for r in regions:
+        prog = compile_program(spec, r)
+        if prog.vmem_bytes() <= vmem_budget:
+            return LaunchPlan(program=prog, streamed=False)
+    if allow_stream:
+        for r in regions:
+            prog = compile_program(spec, r)
+            if prog.vmem_stream_bytes() <= vmem_budget:
+                return LaunchPlan(program=prog, streamed=True)
+    return None
+
+
 def pick_out_region(
     spec: FusionSpec,
     vmem_budget: int = VMEM_BUDGET_BYTES,
@@ -324,13 +393,5 @@ def pick_out_region(
     considered.  Returns ``None`` when nothing fits (the chain must then be
     chunked).
     """
-    out_size = spec.feature_sizes()[-1]
-    regions = [r for r in range(out_size, 0, -1) if out_size % r == 0]
-    for r in regions:
-        if compile_program(spec, r).vmem_bytes() <= vmem_budget:
-            return r
-    if allow_stream:
-        for r in regions:
-            if compile_program(spec, r).vmem_stream_bytes() <= vmem_budget:
-                return r
-    return None
+    plan = plan_launch(spec, vmem_budget, allow_stream=allow_stream)
+    return None if plan is None else plan.out_region

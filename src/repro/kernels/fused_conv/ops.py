@@ -29,6 +29,7 @@ from repro.core.program import (
     VMEM_BUDGET_BYTES,
     compile_program,
     pick_out_region,
+    plan_launch,
 )
 from .fused_conv import fused_pyramid_pallas
 
@@ -36,7 +37,8 @@ from .fused_conv import fused_pyramid_pallas
 @partial(
     jax.jit,
     static_argnames=(
-        "spec", "out_region", "relu", "end_skip", "interpret", "vmem_budget"
+        "spec", "out_region", "streamed", "relu", "end_skip", "interpret",
+        "vmem_budget",
     ),
 )
 def fused_pyramid(
@@ -46,6 +48,7 @@ def fused_pyramid(
     *,
     spec: FusionSpec,
     out_region: int | None = None,
+    streamed: bool | None = None,
     relu: bool = True,
     end_skip: bool = True,
     interpret: bool = True,
@@ -56,22 +59,28 @@ def fused_pyramid(
     ``x``: (B, H, W, C) NHWC; ``weights[l]``: (K, K, Cin, Cout) and
     ``biases[l]``: (Cout,) per conv level, in chain order.  ``out_region``
     must tile the final output exactly; ``None`` picks the largest region
-    fitting the VMEM budget.  Returns ``(out, skip)`` with ``skip``:
+    fitting the VMEM budget.  ``streamed`` pins the weight regime (the
+    plan-driven entry used by :mod:`repro.net.runner`, whose
+    :class:`~repro.core.program.LaunchPlan` already decided it); ``None``
+    derives it from the budget.  Returns ``(out, skip)`` with ``skip``:
     (B, alpha, alpha, Q) int32 END-cascade flags (level 0 never skips).
     """
     if out_region is None:
-        out_region = pick_out_region(spec, vmem_budget=vmem_budget)
-        assert out_region is not None, (
+        lp = plan_launch(spec, vmem_budget=vmem_budget)
+        assert lp is not None, (
             "no output region fits VMEM; chunk via fused_pyramid_chain"
         )
+        out_region = lp.out_region
+        if streamed is None:
+            streamed = lp.streamed
     prog = compile_program(spec, out_region)
-    stream = prog.vmem_bytes() > vmem_budget
-    if stream:
-        vmem = prog.vmem_stream_bytes()
-        assert vmem <= vmem_budget, (
-            f"working set {vmem} exceeds VMEM even with weight streaming;"
-            " chunk via fused_pyramid_chain"
-        )
+    stream = prog.vmem_bytes() > vmem_budget if streamed is None else streamed
+    vmem = prog.vmem_stream_bytes() if stream else prog.vmem_bytes()
+    assert vmem <= vmem_budget, (
+        f"working set {vmem} exceeds VMEM"
+        + ("" if stream else "; retry with streamed weights or")
+        + " chunk via fused_pyramid_chain"
+    )
     xp = jnp.pad(
         x.astype(jnp.float32),
         ((0, 0), (prog.pad_lo, prog.pad_hi), (prog.pad_lo, prog.pad_hi), (0, 0)),
@@ -120,7 +129,7 @@ def fused_conv2(
     return out, skip[..., 1]
 
 
-def _conv_groups(spec: FusionSpec) -> list[list]:
+def conv_groups(spec: FusionSpec) -> list[list]:
     """Split the level chain into [conv + trailing pools] groups — the
     indivisible units of chunking (a pool executes as its conv's epilogue)."""
     assert spec.levels and spec.levels[0].kind == "conv", (
@@ -150,7 +159,7 @@ def plan_chunks(
     lone conv group cannot fit the budget (chunking cannot help: a group is
     the indivisible launch unit).
     """
-    groups = _conv_groups(spec)
+    groups = conv_groups(spec)
     chunks: list[FusionSpec] = []
     size = spec.input_size
 

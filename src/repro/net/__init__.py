@@ -1,0 +1,40 @@
+"""Whole-network fusion: graph IR, memory-aware auto-partitioner, runner.
+
+The subsystem that turns per-pyramid fusion (``kernels/fused_conv``) into
+end-to-end CNN inference with machine-chosen fusion boundaries:
+
+* :mod:`repro.net.graph` — small CNN graph IR + the model zoo (LeNet-5,
+  AlexNet, VGG-16, ResNet-18) and fusable-segment extraction.
+* :mod:`repro.net.partition` — memory-aware auto-partitioner: a dynamic
+  program over legal pyramid cuts minimizing modeled HBM traffic, then
+  modeled latency, under the VMEM budget.
+* :mod:`repro.net.runner` — jit-compiled batched ``run_network`` executing a
+  :class:`~repro.net.partition.PartitionPlan` as fused-pyramid launches plus
+  residual adds and the classifier head, with per-level END skip statistics.
+"""
+
+from .graph import MODELS, Graph, Node, fusable_segments, infer_shapes
+from .partition import (
+    PartitionPlan,
+    PyramidPlan,
+    auto_partition,
+    layerwise_partition,
+    paper_partition,
+)
+from .runner import init_network_params, reference_network, run_network
+
+__all__ = [
+    "MODELS",
+    "Graph",
+    "Node",
+    "PartitionPlan",
+    "PyramidPlan",
+    "auto_partition",
+    "fusable_segments",
+    "infer_shapes",
+    "init_network_params",
+    "layerwise_partition",
+    "paper_partition",
+    "reference_network",
+    "run_network",
+]

@@ -1,0 +1,350 @@
+"""Memory-aware auto-partitioner: where to cut the fusion pyramids.
+
+USEFUSE fuses hand-picked layer groups; the whole-network claim — reduced
+off-chip communication for CNN deployment — needs the *cut points* chosen by
+a memory-aware search (MAFAT's fusing/tiling formulation).  This module runs
+that search over the graph IR:
+
+* Legality: pyramids live inside :func:`~repro.net.graph.fusable_segments`
+  (linear conv/pool chains).  Residual joins, forks (a block input feeding
+  body + shortcut), and head ops terminate segments, so they are cut points
+  by construction.  Within a segment the indivisible unit is the *conv
+  group* — one conv plus its trailing pools — because a pool executes as its
+  conv's epilogue (Fig. 4; ``kernels/fused_conv/ops.conv_groups``).
+* Cost: each candidate pyramid is costed by the tile-program compiler's
+  :func:`~repro.core.program.plan_launch` hook — exact modeled HBM bytes for
+  the launch (reads + writes + weights, re-read per grid cell when the
+  VMEM budget forces the streamed-weight regime) and the DS-1 cycle model as
+  the latency tiebreaker.  A pyramid no launch regime can fit is illegal.
+* Search: per segment, a dynamic program over conv-group cut positions
+  minimizing summed (HBM bytes, modeled cycles) lexicographically — optimal
+  over the exponential cut space in O(G^2) cost evaluations
+  (:func:`partition_segment`; brute-force oracle in the tests).
+
+Baselines built from the same machinery: :func:`layerwise_partition` (every
+conv group its own launch — the unfused dataflow) and
+:func:`paper_partition` (USEFUSE's hand-picked groups: first two convs for
+LeNet/AlexNet, VGG blocks 1-2, ResNet-18 per-block conv pairs).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+
+from repro.core.fusion import FusionSpec
+from repro.core.program import VMEM_BUDGET_BYTES, LaunchPlan, plan_launch
+from repro.kernels.fused_conv.ops import conv_groups
+
+from .graph import Graph, Segment, fusable_segments
+
+INFEASIBLE = (float("inf"), float("inf"))
+
+
+@dataclass(frozen=True)
+class PyramidPlan:
+    """One chosen pyramid: the launch configuration plus the graph nodes it
+    covers.  ``relu`` is the chain's uniform fused activation."""
+
+    launch: LaunchPlan
+    node_names: tuple[str, ...]
+    relu: bool
+
+    @property
+    def spec(self) -> FusionSpec:
+        return self.launch.spec
+
+    @property
+    def name(self) -> str:
+        return self.node_names[0] if len(self.node_names) == 1 else (
+            f"{self.node_names[0]}..{self.node_names[-1]}"
+        )
+
+    @property
+    def q_convs(self) -> int:
+        return self.spec.q_convs
+
+
+@dataclass(frozen=True)
+class PartitionPlan:
+    """A full execution plan: pyramids keyed by their first covered node,
+    everything else executed as plain ops by the runner.  Hashable — a jit
+    static argument of :func:`repro.net.runner.run_network`."""
+
+    graph: Graph
+    pyramids: tuple[PyramidPlan, ...]
+    vmem_budget: int
+    batch: int
+
+    def pyramid_at(self, node_name: str) -> PyramidPlan | None:
+        for p in self.pyramids:
+            if p.node_names[0] == node_name:
+                return p
+        return None
+
+    def covered(self) -> frozenset[str]:
+        return frozenset(n for p in self.pyramids for n in p.node_names)
+
+    def hbm_bytes(self) -> int:
+        """Modeled off-chip traffic of all pyramid launches.  Head ops and
+        residual adds are identical across partitions, so they are excluded —
+        this is the quantity the DP minimizes and the benchmarks compare."""
+        return sum(p.launch.hbm_bytes(self.batch) for p in self.pyramids)
+
+    def modeled_cycles(self) -> int:
+        return sum(p.launch.modeled_cycles(self.batch) for p in self.pyramids)
+
+    def n_launches(self) -> int:
+        return len(self.pyramids)
+
+    def summary(self) -> str:
+        rows = [
+            f"  {p.name:<24} Q={p.q_convs} region={p.launch.out_region}"
+            f" {'streamed' if p.launch.streamed else 'resident'}"
+            f" hbm={p.launch.hbm_bytes(self.batch):,}B"
+            for p in self.pyramids
+        ]
+        return (
+            f"PartitionPlan[{self.graph.name}] batch={self.batch} "
+            f"launches={self.n_launches()} hbm={self.hbm_bytes():,}B\n"
+            + "\n".join(rows)
+        )
+
+
+# ---------------------------------------------------------------------------
+# Segment-level dynamic program
+# ---------------------------------------------------------------------------
+
+
+def _group_specs(segment: Segment) -> tuple[list[list], list[int], list[int]]:
+    """Conv groups of a segment plus the spatial size / channel count
+    entering each group boundary (index g = before group g)."""
+    spec = segment.spec()
+    groups = conv_groups(spec)
+    sizes = spec.feature_sizes()
+    bound_sizes, bound_ch = [segment.input_size], [segment.in_channels]
+    li = 0
+    for g in groups:
+        li += len(g)
+        bound_sizes.append(sizes[li])
+        bound_ch.append(g[0].n_out)
+    return groups, bound_sizes, bound_ch
+
+
+def _span_launch(
+    groups: list[list], bound_sizes: list[int], i: int, j: int,
+    vmem_budget: int, prefer_region: str = "largest",
+) -> LaunchPlan | None:
+    """Launch plan (or None) for one pyramid covering groups [i, j)."""
+    levels = tuple(itertools.chain.from_iterable(groups[i:j]))
+    spec = FusionSpec(levels=levels, input_size=bound_sizes[i])
+    return plan_launch(spec, vmem_budget=vmem_budget, prefer_region=prefer_region)
+
+
+def partition_segment(
+    segment: Segment,
+    *,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+    batch: int = 1,
+    max_convs: int | None = None,
+    prefer_region: str = "largest",
+) -> list[LaunchPlan]:
+    """Optimal cuts of one segment: DP over conv-group boundaries minimizing
+    (sum HBM bytes, sum modeled cycles) lexicographically.
+
+    ``max_convs`` caps pyramid depth (1 = the layer-by-layer baseline).
+    Raises ``ValueError`` when some single conv group fits no launch regime
+    even alone — no partition can execute that segment.
+    """
+    groups, bound_sizes, _ = _group_specs(segment)
+    n = len(groups)
+    launches: dict[tuple[int, int], LaunchPlan] = {}
+    cost: dict[tuple[int, int], tuple[float, float]] = {}
+    for i in range(n):
+        for j in range(i + 1, n + 1):
+            convs = sum(1 for g in groups[i:j] for l in g if l.kind == "conv")
+            if max_convs is not None and convs > max_convs:
+                cost[(i, j)] = INFEASIBLE
+                continue
+            lp = _span_launch(groups, bound_sizes, i, j, vmem_budget,
+                              prefer_region)
+            if lp is None:
+                cost[(i, j)] = INFEASIBLE
+                continue
+            launches[(i, j)] = lp
+            cost[(i, j)] = (
+                float(lp.hbm_bytes(batch)), float(lp.modeled_cycles(batch))
+            )
+
+    best: list[tuple[float, float]] = [(0.0, 0.0)] + [INFEASIBLE] * n
+    back: list[int] = [0] * (n + 1)
+    for j in range(1, n + 1):
+        for i in range(j):
+            if best[i] == INFEASIBLE or cost[(i, j)] == INFEASIBLE:
+                continue
+            cand = (best[i][0] + cost[(i, j)][0], best[i][1] + cost[(i, j)][1])
+            if cand < best[j]:
+                best[j] = cand
+                back[j] = i
+    if best[n] == INFEASIBLE:
+        bad = next(
+            g for k, g in enumerate(groups) if cost[(k, k + 1)] == INFEASIBLE
+        )
+        raise ValueError(
+            f"conv group [{bad[0].name or bad[0]}] fits no launch regime under"
+            f" the {vmem_budget}-byte VMEM budget; no partition can run it"
+        )
+    cuts, j = [], n
+    while j > 0:
+        i = back[j]
+        cuts.append(launches[(i, j)])
+        j = i
+    return list(reversed(cuts))
+
+
+def brute_force_segment(
+    segment: Segment,
+    *,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+    batch: int = 1,
+) -> tuple[float, float]:
+    """Exhaustive minimum over all 2^(G-1) cut sets — the DP's test oracle."""
+    groups, bound_sizes, _ = _group_specs(segment)
+    n = len(groups)
+    best = INFEASIBLE
+    for mask in range(1 << (n - 1)):
+        bounds = [0] + [k + 1 for k in range(n - 1) if mask >> k & 1] + [n]
+        hbm = cyc = 0.0
+        for i, j in zip(bounds, bounds[1:]):
+            lp = _span_launch(groups, bound_sizes, i, j, vmem_budget)
+            if lp is None:
+                break
+            hbm += lp.hbm_bytes(batch)
+            cyc += lp.modeled_cycles(batch)
+        else:
+            best = min(best, (hbm, cyc))
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Whole-graph partitions
+# ---------------------------------------------------------------------------
+
+
+def _segment_pyramids(
+    segment: Segment, launches: list[LaunchPlan]
+) -> list[PyramidPlan]:
+    """Attach covered node names to each launch, walking the chain."""
+    out, li = [], 0
+    for lp in launches:
+        n_levels = len(lp.spec.levels)
+        names = tuple(n.name for n in segment.nodes[li : li + n_levels])
+        out.append(PyramidPlan(launch=lp, node_names=names, relu=segment.relu))
+        li += n_levels
+    assert li == len(segment.nodes), "launches must tile the segment"
+    return out
+
+
+def auto_partition(
+    graph: Graph,
+    *,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+    batch: int = 1,
+    max_convs: int | None = None,
+    prefer_region: str = "largest",
+) -> PartitionPlan:
+    """Machine-chosen fusion boundaries for the whole network.
+    ``prefer_region="smallest"`` trades grid overhead for maximal tile grids
+    (finest END-skip granularity) — the paper's smallest-tile preference."""
+    pyramids: list[PyramidPlan] = []
+    for seg in fusable_segments(graph):
+        launches = partition_segment(
+            seg, vmem_budget=vmem_budget, batch=batch, max_convs=max_convs,
+            prefer_region=prefer_region,
+        )
+        pyramids.extend(_segment_pyramids(seg, launches))
+    return PartitionPlan(
+        graph=graph, pyramids=tuple(pyramids), vmem_budget=vmem_budget,
+        batch=batch,
+    )
+
+
+def min_vmem_budget(graph: Graph) -> int:
+    """Smallest VMEM budget under which every conv group of the graph still
+    has some launch regime — the floor below which no partition exists.
+    Partitioning under this budget forces minimal output regions (maximal
+    tile grids), which is also how the example script provokes the END
+    cascade at reduced scale."""
+    from repro.core.program import compile_program
+
+    worst = 0
+    for seg in fusable_segments(graph):
+        groups, bound_sizes, _ = _group_specs(seg)
+        for i in range(len(groups)):
+            spec = FusionSpec(levels=tuple(groups[i]), input_size=bound_sizes[i])
+            out_size = spec.feature_sizes()[-1]
+            cheapest = min(
+                min(prog.vmem_bytes(), prog.vmem_stream_bytes())
+                for prog in (
+                    compile_program(spec, r)
+                    for r in range(1, out_size + 1)
+                    if out_size % r == 0
+                )
+            )
+            worst = max(worst, cheapest)
+    return worst
+
+
+def layerwise_partition(
+    graph: Graph, *, vmem_budget: int = VMEM_BUDGET_BYTES, batch: int = 1
+) -> PartitionPlan:
+    """The unfused baseline: every conv group is its own launch, every
+    intermediate map round-trips HBM."""
+    return auto_partition(
+        graph, vmem_budget=vmem_budget, batch=batch, max_convs=1
+    )
+
+
+# USEFUSE's hand-picked fusion depth per leading segment: LeNet-5 / AlexNet
+# fuse the first two convs (+pools); VGG-16 fuses blocks 1-2 (four convs).
+_PAPER_HEAD_CONVS = {"lenet": 2, "alexnet": 2, "vgg16": 4}
+
+
+def paper_partition(
+    graph: Graph, *, vmem_budget: int = VMEM_BUDGET_BYTES, batch: int = 1
+) -> PartitionPlan:
+    """The paper's hand-picked fusion choices, expressed as a partition:
+    the leading segment fuses the quoted conv count and leaves the rest
+    layer-by-layer; ResNet-18 fuses each residual block's conv pair (§4.3),
+    which is exactly per-segment maximal fusion — shortcuts and the stem stay
+    single launches."""
+    pyramids: list[PyramidPlan] = []
+    head_convs = _PAPER_HEAD_CONVS.get(graph.name)
+    for si, seg in enumerate(fusable_segments(graph)):
+        groups, bound_sizes, _ = _group_specs(seg)
+        if graph.name == "resnet18":
+            spans = [(0, len(groups))]  # whole segment: block pair / stem
+        elif si == 0 and head_convs is not None:
+            convs = head = 0
+            for gi, g in enumerate(groups):
+                convs += sum(1 for l in g if l.kind == "conv")
+                if convs == head_convs:
+                    head = gi + 1
+                    break
+            spans = [(0, head)] + [(k, k + 1) for k in range(head, len(groups))]
+        else:
+            spans = [(k, k + 1) for k in range(len(groups))]
+        launches = []
+        for i, j in spans:
+            lp = _span_launch(groups, bound_sizes, i, j, vmem_budget)
+            if lp is None:
+                raise ValueError(
+                    f"paper fusion group {i}:{j} of segment {si} does not fit"
+                    f" the {vmem_budget}-byte VMEM budget"
+                )
+            launches.append(lp)
+        pyramids.extend(_segment_pyramids(seg, launches))
+    return PartitionPlan(
+        graph=graph, pyramids=tuple(pyramids), vmem_budget=vmem_budget,
+        batch=batch,
+    )

@@ -1,0 +1,191 @@
+"""End-to-end batched network execution: ``run_network`` and its oracle.
+
+``run_network`` executes a :class:`~repro.net.partition.PartitionPlan` as a
+sequence of fused-pyramid Pallas launches (one per chosen pyramid, weights
+resident or streamed per the plan) stitched together with the plain-JAX ops
+the plan left outside pyramids: residual adds, standalone activations,
+global pooling, flatten, and the dense classifier head.  The whole forward
+is jit-compiled with the plan as a static argument; the per-launch END skip
+flag maps are returned alongside the logits.
+
+``reference_network`` is the monolithic oracle: the same graph executed
+node-by-node with full intermediate feature maps via
+``jax.lax.conv_general_dilated`` / ``reduce_window``.  ``run_network`` must
+match it bit-close (float32 ``atol 1e-4`` end-to-end; enforced in
+``tests/test_network_runner.py``) — that contract is what makes the
+auto-partitioner free to move fusion boundaries without changing results.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fused_conv.ops import fused_pyramid
+
+from .graph import Graph, Node, infer_shapes
+from .partition import PartitionPlan, auto_partition
+
+Params = dict[str, tuple[jnp.ndarray, jnp.ndarray]]
+
+
+def init_network_params(graph: Graph, key: jax.Array, scale: float = 1.0) -> Params:
+    """He-initialized weights for every conv and dense node, keyed by node
+    name: conv ``(K, K, Cin, Cout)`` + bias, dense ``(fan_in, n_out)`` + bias."""
+    shapes = infer_shapes(graph)
+    params: Params = {}
+    for n in graph.nodes:
+        if n.op not in ("conv", "dense"):
+            continue
+        key, k1, k2 = jax.random.split(key, 3)
+        c_in = shapes[n.inputs[0]].channels
+        fan_in = (n.K * n.K * c_in) if n.op == "conv" else c_in
+        shape = (n.K, n.K, c_in, n.n_out) if n.op == "conv" else (c_in, n.n_out)
+        w = jax.random.normal(k1, shape) * (scale * (2.0 / fan_in) ** 0.5)
+        b = jax.random.normal(k2, (n.n_out,)) * 0.01
+        params[n.name] = (w.astype(jnp.float32), b.astype(jnp.float32))
+    return params
+
+
+def _conv_node(x, n: Node, w, b):
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(n.S, n.S),
+        padding=[(n.pad, n.pad), (n.pad, n.pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ) + b
+    return jax.nn.relu(out) if n.relu else out
+
+
+def _pool_node(x, n: Node):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max,
+        window_dimensions=(1, n.K, n.K, 1),
+        window_strides=(1, n.S, n.S, 1),
+        padding=((0, 0), (n.pad, n.pad), (n.pad, n.pad), (0, 0)),
+    )
+
+
+def _head_op(values, n: Node, params: Params):
+    if n.op == "relu":
+        return jax.nn.relu(values[n.inputs[0]])
+    if n.op == "add":
+        return values[n.inputs[0]] + values[n.inputs[1]]
+    if n.op == "global_pool":
+        return jnp.mean(values[n.inputs[0]], axis=(1, 2))
+    if n.op == "flatten":
+        x = values[n.inputs[0]]
+        return x.reshape(x.shape[0], -1)
+    if n.op == "dense":
+        w, b = params[n.name]
+        out = values[n.inputs[0]] @ w + b
+        return jax.nn.relu(out) if n.relu else out
+    raise AssertionError(f"unhandled op {n.op}")
+
+
+def reference_network(x: jnp.ndarray, graph: Graph, params: Params) -> jnp.ndarray:
+    """Monolithic node-by-node forward: full intermediate maps, no fusion.
+    Ground truth for ``run_network`` and the baseline dataflow whose off-chip
+    traffic the partitioner minimizes."""
+    values = {graph.nodes[0].name: x.astype(jnp.float32)}
+    for n in graph.nodes[1:]:
+        if n.op == "conv":
+            w, b = params[n.name]
+            values[n.name] = _conv_node(values[n.inputs[0]], n, w, b)
+        elif n.op == "pool":
+            values[n.name] = _pool_node(values[n.inputs[0]], n)
+        else:
+            values[n.name] = _head_op(values, n, params)
+    return values[graph.output.name]
+
+
+@partial(jax.jit, static_argnames=("plan", "end_skip", "interpret"))
+def run_network(
+    x: jnp.ndarray,
+    params: Params,
+    *,
+    plan: PartitionPlan,
+    end_skip: bool = True,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
+    """Execute the partition plan end to end for a batch ``x`` (B, H, W, C).
+
+    Returns ``(logits, skips)``: ``skips[pyramid.name]`` is that launch's
+    ``(B, alpha, alpha, Q)`` int32 END-cascade flag map (level 0 of each
+    pyramid never skips).  Aggregate with :func:`skip_fractions`.
+    """
+    graph = plan.graph
+    covered = plan.covered()
+    values = {graph.nodes[0].name: x.astype(jnp.float32)}
+    skips: dict[str, jnp.ndarray] = {}
+    for n in graph.nodes[1:]:
+        if n.name in covered:
+            pyr = plan.pyramid_at(n.name)
+            if pyr is None:
+                continue  # interior pyramid node: computed with its launch
+            conv_names = [m for m in pyr.node_names
+                          if graph.node(m).op == "conv"]
+            y, skip = fused_pyramid(
+                values[n.inputs[0]],
+                [params[m][0] for m in conv_names],
+                [params[m][1] for m in conv_names],
+                spec=pyr.spec,
+                out_region=pyr.launch.out_region,
+                streamed=pyr.launch.streamed,
+                relu=pyr.relu,
+                end_skip=end_skip,
+                interpret=interpret,
+                vmem_budget=plan.vmem_budget,
+            )
+            values[pyr.node_names[-1]] = y
+            skips[pyr.name] = skip
+        elif n.op == "conv":
+            w, b = params[n.name]
+            values[n.name] = _conv_node(values[n.inputs[0]], n, w, b)
+        elif n.op == "pool":
+            values[n.name] = _pool_node(values[n.inputs[0]], n)
+        else:
+            values[n.name] = _head_op(values, n, params)
+    return values[graph.output.name], skips
+
+
+def skip_fractions(skips: dict[str, jnp.ndarray]) -> dict[str, list[float]]:
+    """Per-pyramid, per-level fraction of tiles the END cascade skipped."""
+    return {
+        name: [float(f) for f in np.asarray(s, dtype=np.float64).mean(axis=(0, 1, 2))]
+        for name, s in skips.items()
+    }
+
+
+def run_model(
+    name: str,
+    x: jnp.ndarray,
+    params: Params | None = None,
+    *,
+    input_size: int | None = None,
+    num_classes: int | None = None,
+    plan: PartitionPlan | None = None,
+    seed: int = 0,
+    interpret: bool = True,
+):
+    """Convenience one-shot: build the zoo graph, auto-partition, run.
+
+    Returns ``(logits, skips, plan, params)``.  Used by the example script
+    and benchmarks; library code should call :func:`run_network` directly.
+    """
+    from .graph import MODELS
+
+    kwargs = {}
+    if input_size is not None:
+        kwargs["input_size"] = input_size
+    if num_classes is not None:
+        kwargs["num_classes"] = num_classes
+    graph = MODELS[name](**kwargs)
+    if plan is None:
+        plan = auto_partition(graph, batch=x.shape[0])
+    if params is None:
+        params = init_network_params(graph, jax.random.PRNGKey(seed))
+    logits, skips = run_network(x, params, plan=plan, interpret=interpret)
+    return logits, skips, plan, params

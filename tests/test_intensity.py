@@ -1,0 +1,105 @@
+"""Direct unit tests for the operational-intensity model (core/intensity.py):
+byte accounting across strides and paddings, naive-vs-uniform improvement,
+and the paper's LeNet-5 headline number."""
+
+import pytest
+
+from repro.core.cnn_models import LENET5_FUSION
+from repro.core.cycle_model import naive_alpha
+from repro.core.fusion import FusedLevel, FusionSpec, plan_fusion
+from repro.core.intensity import (
+    fused_bytes,
+    intensity_improvement,
+    unfused_bytes,
+    weight_bytes,
+)
+
+
+def _spec(levels, size):
+    return FusionSpec(levels=tuple(levels), input_size=size)
+
+
+class TestUnfusedBytes:
+    def test_stride1_no_pad_hand_computed(self):
+        # 8x8x2 -> conv3x3 -> 6x6x4 -> pool2x2 -> 3x3x4
+        spec = _spec(
+            [FusedLevel("conv", 3, 1, 0, 2, 4), FusedLevel("pool", 2, 2, 0, 4, 4)],
+            8,
+        )
+        w = 3 * 3 * 2 * 4
+        expect = (8 * 8 * 2 + 6 * 6 * 4) + (6 * 6 * 4 + 3 * 3 * 4) + w
+        assert unfused_bytes(spec) == expect
+
+    def test_stride2_with_pad(self):
+        # 9x9x3 -> conv3x3/S2/pad1 -> 5x5x6: maps are charged at their
+        # UNPADDED sizes (pad rows never cross off-chip)
+        spec = _spec([FusedLevel("conv", 3, 2, 1, 3, 6)], 9)
+        assert spec.feature_sizes() == [9, 5]
+        assert unfused_bytes(spec) == 9 * 9 * 3 + 5 * 5 * 6 + 3 * 3 * 3 * 6
+
+    def test_bytes_per_val_scales_everything(self):
+        spec = _spec([FusedLevel("conv", 3, 1, 1, 1, 2)], 6)
+        assert unfused_bytes(spec, bytes_per_val=4) == 4 * unfused_bytes(spec)
+
+    def test_weight_bytes_counts_convs_only(self):
+        spec = _spec(
+            [FusedLevel("conv", 5, 1, 0, 2, 3), FusedLevel("pool", 2, 2, 0, 3, 3)],
+            12,
+        )
+        assert weight_bytes(spec) == 5 * 5 * 2 * 3
+
+
+class TestFusedBytes:
+    def test_uniform_formula_hand_computed(self):
+        # 12x12x2 -> conv3x3 -> 10 -> pool2 -> 5; out_region 1 => alpha 5
+        spec = _spec(
+            [FusedLevel("conv", 3, 1, 0, 2, 4), FusedLevel("pool", 2, 2, 0, 4, 4)],
+            12,
+        )
+        plan = plan_fusion(spec, out_region=1)
+        h1 = plan.levels[0].tile
+        expect = (
+            plan.alpha ** 2 * h1 * h1 * 2  # tile reads
+            + 5 * 5 * 4                    # final map write
+            + 3 * 3 * 2 * 4                # weights once
+        )
+        assert fused_bytes(spec, plan) == expect
+
+    def test_naive_stride_reads_more(self):
+        spec = LENET5_FUSION
+        plan = plan_fusion(spec, out_region=1)
+        assert naive_alpha(plan) > plan.alpha
+        assert fused_bytes(spec, plan, uniform=False) > fused_bytes(spec, plan)
+
+    @pytest.mark.parametrize("S,pad", [(1, 0), (1, 1), (2, 0), (2, 1)])
+    def test_fused_beats_unfused_across_strides_and_pads(self, S, pad):
+        """Fusion's point: once the chain is deep enough that intermediate
+        maps dominate, fused traffic undercuts layer-by-layer."""
+        levels = [
+            FusedLevel("conv", 3, S, pad, 2, 8),
+            FusedLevel("conv", 3, 1, 1, 8, 8),
+            FusedLevel("conv", 3, 1, 1, 8, 8),
+        ]
+        spec = _spec(levels, 20)
+        plan = plan_fusion(spec)
+        assert fused_bytes(spec, plan) < unfused_bytes(spec)
+
+
+class TestIntensityImprovement:
+    def test_lenet_reproduces_paper_8_2x(self):
+        plan = plan_fusion(LENET5_FUSION, out_region=1)
+        assert intensity_improvement(LENET5_FUSION, plan) == pytest.approx(
+            8.2, abs=0.05
+        )
+
+    def test_improvement_is_naive_over_uniform(self):
+        spec = _spec(
+            [FusedLevel("conv", 3, 1, 0, 1, 4), FusedLevel("conv", 3, 1, 0, 4, 4)],
+            16,
+        )
+        plan = plan_fusion(spec)
+        imp = intensity_improvement(spec, plan)
+        assert imp == pytest.approx(
+            fused_bytes(spec, plan, uniform=False) / fused_bytes(spec, plan)
+        )
+        assert imp >= 1.0

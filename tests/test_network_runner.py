@@ -1,0 +1,123 @@
+"""End-to-end `run_network` vs the monolithic JAX reference (float32
+atol 1e-4): LeNet-5 at paper scale, ResNet-18 (reduced input, full channel
+plan — padded stem pool, residual adds, projection shortcuts, streamed
+512-channel pair), VGG-16 topology at reduced scale, and END skip stats."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.net.graph import lenet5, resnet18, vgg16
+from repro.net.partition import auto_partition, layerwise_partition
+from repro.net.runner import (
+    init_network_params,
+    reference_network,
+    run_network,
+    skip_fractions,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _run_and_check(graph, batch=2, atol=1e-4, plan=None, seed=1):
+    params = init_network_params(graph, KEY)
+    x = jax.random.normal(
+        jax.random.PRNGKey(seed),
+        (batch, graph.input_size, graph.input_size, graph.in_channels),
+    )
+    if plan is None:
+        plan = auto_partition(graph, batch=batch)
+    logits, skips = run_network(x, params, plan=plan)
+    ref = reference_network(x, graph, params)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref), atol=atol)
+    return plan, skips
+
+
+class TestEndToEndParity:
+    def test_lenet5_paper_scale(self):
+        plan, skips = _run_and_check(lenet5())
+        assert plan.n_launches() == 1  # whole backbone is one pyramid
+
+    def test_resnet18_reduced_scale(self):
+        """The acceptance network: residual adds, projection shortcuts and
+        the full channel plan (64..512), reduced spatially for interpret
+        mode.  Matches the monolithic reference within 1e-4."""
+        graph = resnet18(input_size=32, num_classes=10)
+        plan, skips = _run_and_check(graph)
+        assert plan.n_launches() >= 10
+        # every pyramid emitted a skip map with one flag per conv level
+        for p in plan.pyramids:
+            assert skips[p.name].shape[-1] == p.q_convs
+
+    def test_vgg16_topology_reduced_scale(self):
+        graph = vgg16(input_size=32, num_classes=10)
+        _run_and_check(graph)
+
+    def test_layerwise_plan_same_logits(self):
+        """Partitioning is semantics-free: layer-by-layer and auto plans
+        produce identical logits."""
+        graph = lenet5()
+        params = init_network_params(graph, KEY)
+        x = jax.random.normal(jax.random.PRNGKey(2), (1, 32, 32, 1))
+        auto, _ = run_network(x, params, plan=auto_partition(graph))
+        layer, _ = run_network(x, params, plan=layerwise_partition(graph))
+        np.testing.assert_allclose(
+            np.asarray(auto), np.asarray(layer), atol=1e-5
+        )
+
+    def test_stem_with_padded_pool_matches(self):
+        """ResNet's conv7x7/2 + maxpool3x3/2(pad 1) stem as one fused launch:
+        the padded-pool epilogue (zeros == -inf for post-ReLU data) is exact."""
+        graph = resnet18(input_size=64, num_classes=10)
+        params = init_network_params(graph, KEY)
+        x = jax.random.normal(jax.random.PRNGKey(3), (1, 64, 64, 3))
+        plan = auto_partition(graph)
+        stem = plan.pyramid_at("conv1")
+        assert stem is not None and stem.node_names == ("conv1", "maxpool")
+        _run_and_check(graph, batch=1, plan=plan)
+
+
+class TestSkipStatistics:
+    def test_dead_input_cascades_through_lenet(self):
+        """A zero image with negative biases: every level past the first
+        skips, and the fractions report it."""
+        graph = lenet5()
+        params = init_network_params(graph, KEY)
+        params = {
+            k: (w, b - 10.0) if k in ("CL1", "CL2") else (w, b)
+            for k, (w, b) in params.items()
+        }
+        x = jnp.zeros((1, 32, 32, 1))
+        plan = auto_partition(graph)
+        _, skips = run_network(x, params, plan=plan)
+        frac = skip_fractions(skips)
+        name = plan.pyramids[0].name
+        assert frac[name][0] == 0.0  # level 0 never skips
+        assert frac[name][1] == 1.0
+
+    def test_dense_input_no_skips(self):
+        graph = lenet5()
+        params = init_network_params(graph, KEY)
+        x = jax.random.normal(jax.random.PRNGKey(4), (1, 32, 32, 1))
+        plan = auto_partition(graph)
+        _, skips = run_network(x, params, plan=plan)
+        for fr in skip_fractions(skips).values():
+            assert fr[0] == 0.0
+
+
+class TestParamsAndShapes:
+    def test_init_covers_all_parametric_nodes(self):
+        graph = resnet18(input_size=32, num_classes=10)
+        params = init_network_params(graph, KEY)
+        want = {n.name for n in graph.nodes if n.op in ("conv", "dense")}
+        assert set(params) == want
+        w, b = params["FC"]
+        assert w.shape == (512, 10) and b.shape == (10,)
+
+    def test_logits_shape_follows_num_classes(self):
+        graph = lenet5(num_classes=7)
+        params = init_network_params(graph, KEY)
+        x = jnp.zeros((3, 32, 32, 1))
+        logits, _ = run_network(x, params, plan=auto_partition(graph, batch=3))
+        assert logits.shape == (3, 7)
