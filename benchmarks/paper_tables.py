@@ -10,7 +10,7 @@ documented baseline model.
 from __future__ import annotations
 
 from repro.core.cnn_models import NETWORKS, PAPER_OPS, PAPER_OUT_REGION
-from repro.core.cycle_model import evaluate_design, single_layer_result
+from repro.core.cycle_model import evaluate_design
 from repro.core.fusion import plan_fusion
 
 # paper-printed values: (duration_us, ...) from Tables 1-4

@@ -79,6 +79,100 @@ def _partition_comparison(csv=print) -> dict:
     return out
 
 
+def _kernel_dataflow(csv=print, dry_run: bool = True) -> dict:
+    """Per-launch HBM dataflow of the fused-pyramid kernel: the retired
+    whole-image-resident input model vs the halo-tile model (what the kernel
+    now actually moves), per regime, plus compiled-vs-interpret wall clock
+    when kernels may run.  The analytic rows are emitted even under
+    ``--dry-run`` so the CI smoke job can assert the section exists and the
+    bench trajectory has comparable numbers."""
+    import jax
+
+    from repro.core.cnn_models import (
+        LENET5_FUSION,
+        VGG_FUSION,
+        resnet18_fusions,
+    )
+    from repro.core.intensity import launch_dataflow
+    from repro.core.program import plan_launch
+
+    out: dict = {"launches": {}}
+    csv(
+        "kernel_dataflow,workload,input_model,input_bytes,weight_bytes,"
+        "output_bytes,regime"
+    )
+    specs = {
+        "lenet_q2": LENET5_FUSION,
+        "vgg_blocks12_q4_224": VGG_FUSION,
+        "resnet18_b7_streamed": resnet18_fusions()[7],
+    }
+    for name, spec in specs.items():
+        lp = plan_launch(spec)
+        flow = launch_dataflow(lp.program, streamed=lp.streamed)
+        regime = (
+            f"streamed_x{lp.w_slots}" if lp.streamed else "resident"
+        )
+        row = {
+            **flow,
+            "alpha": lp.program.alpha,
+            "out_region": lp.out_region,
+            "tile0": lp.program.tile0,
+            "streamed": lp.streamed,
+            "w_slots": lp.w_slots,
+            "hbm_bytes_total": lp.hbm_bytes(),
+            "input_reduction": (
+                flow["input_bytes_whole_image"] / flow["input_bytes_halo"]
+            ),
+            "modeled_cycles": lp.modeled_cycles(),
+        }
+        out["launches"][name] = row
+        for model in ("whole_image", "halo"):
+            csv(
+                f"kernel_dataflow,{name},{model},"
+                f"{flow[f'input_bytes_{model}']},{flow['weight_bytes']},"
+                f"{flow['output_bytes']},{regime}"
+            )
+        csv(
+            f"kernel_dataflow_reduction,{name},input,"
+            f"{row['input_reduction']:.1f}x,alpha,{row['alpha']}"
+        )
+
+    if not dry_run:
+        from repro.core import resolve_interpret
+        from repro.core.executor import init_pyramid_params
+        from repro.kernels.fused_conv.ops import fused_pyramid
+
+        spec = LENET5_FUSION
+        params = init_pyramid_params(spec, jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32, 1))
+        wall: dict = {"backend": jax.default_backend()}
+        modes = [("interpret", True)]
+        if not resolve_interpret(None):  # compiled mode available (TPU)
+            modes.append(("compiled", False))
+        for label, interp in modes:
+            y, _ = fused_pyramid(
+                x, params.weights, params.biases, spec=spec, out_region=1,
+                interpret=interp,
+            )  # warm the jit cache
+            jax.block_until_ready(y)
+            t0 = time.perf_counter()
+            for _ in range(3):
+                y, _ = fused_pyramid(
+                    x, params.weights, params.biases, spec=spec,
+                    out_region=1, interpret=interp,
+                )
+                jax.block_until_ready(y)
+            wall[f"{label}_ms"] = (time.perf_counter() - t0) / 3 * 1e3
+            csv(
+                f"kernel_dataflow_wallclock,lenet_q2,{label},"
+                f"{wall[f'{label}_ms']:.1f},ms_per_call"
+            )
+        if "compiled_ms" not in wall:
+            wall["compiled_ms"] = None  # no TPU on this host
+        out["wallclock"] = wall
+    return out
+
+
 def _lenet_e2e(csv=print) -> dict:
     """End-to-end LeNet-5 through run_network: wall clock + skip fractions
     (the only zoo model cheap enough to execute at paper scale in interpret
@@ -87,11 +181,18 @@ def _lenet_e2e(csv=print) -> dict:
 
     from repro.net.graph import lenet5
     from repro.net.partition import auto_partition
-    from repro.net.runner import init_network_params, run_network, skip_fractions
+    from repro.net.runner import (
+        init_network_params,
+        prepare_network_params,
+        run_network,
+        skip_fractions,
+    )
 
     graph = lenet5()
     plan = auto_partition(graph, batch=4)
-    params = init_network_params(graph, jax.random.PRNGKey(0))
+    params = prepare_network_params(
+        plan, init_network_params(graph, jax.random.PRNGKey(0))
+    )
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 32, 1))
     logits, skips = run_network(x, params, plan=plan)  # warm the jit cache
     jax.block_until_ready(logits)
@@ -227,6 +328,8 @@ def main(argv: list[str] | None = None) -> None:
     intensity.run()
     print("== whole-network partitions: auto vs paper vs layer-by-layer ==")
     bench["partition"] = _partition_comparison()
+    print("== kernel dataflow: whole-image vs halo-tile HBM traffic ==")
+    bench["kernel_dataflow"] = _kernel_dataflow(dry_run=args.dry_run)
 
     if not args.dry_run:
         from benchmarks import end_savings

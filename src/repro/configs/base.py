@@ -9,7 +9,7 @@ the family-preserving small config used by the CPU smoke tests.
 from __future__ import annotations
 
 import importlib
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Tuple
 
 

@@ -10,7 +10,11 @@ Public API:
 * cycle / performance models — :mod:`repro.core.cycle_model` (Eqs. (2)-(4))
 * operational intensity — :mod:`repro.core.intensity` (Figs. 10-11)
 * fused execution — :mod:`repro.core.executor`
+* backend dispatch — :func:`resolve_interpret` (compiled on TPU, interpreted
+  elsewhere), shared by every kernel entry point
 """
+
+import jax
 
 from .fusion import (
     FusedLevel,
@@ -49,6 +53,20 @@ from .online_arith import (
     to_digits,
 )
 
+
+def resolve_interpret(interpret: bool | None = None) -> bool:
+    """Resolve a kernel entry point's ``interpret`` argument.
+
+    ``None`` (the default everywhere) auto-detects: compiled Mosaic on a real
+    TPU backend, the Pallas interpreter on CPU/GPU (CI, laptops, autodiff
+    debugging).  An explicit bool is honored unchanged, so tests can pin
+    either mode.
+    """
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
 __all__ = [
     "ArithParams",
     "ConvLevelProg",
@@ -78,6 +96,7 @@ __all__ = [
     "plan_fusion",
     "receptive_window",
     "reference_forward",
+    "resolve_interpret",
     "sop_digits_fast",
     "tile_sizes",
     "to_digits",

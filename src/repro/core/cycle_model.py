@@ -32,7 +32,7 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
-from .fusion import FusionPlan, FusionSpec, plan_fusion, tile_sizes
+from .fusion import FusionPlan, FusionSpec
 
 
 def _log2c(x: int) -> int:

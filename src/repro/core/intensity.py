@@ -75,3 +75,28 @@ class IntensityPoint:
 def intensity_improvement(spec: FusionSpec, plan: FusionPlan) -> float:
     """OI(proposed uniform-stride fusion) / OI(naive-stride fusion)."""
     return fused_bytes(spec, plan, uniform=False) / fused_bytes(spec, plan)
+
+
+def launch_dataflow(program, batch: int = 1, *, streamed: bool = False) -> dict:
+    """Per-launch HBM byte breakdown of one kernel launch (float32 traffic).
+
+    The bridge between the paper-level OI accounting above and the kernel's
+    :class:`~repro.core.program.TileProgram` model: the same halo-tile input
+    term (``alpha^2 * tile0^2 * C``, Algorithm 4's uniform minimal movement)
+    that :meth:`TileProgram.hbm_bytes` charges and the partitioner DP
+    minimizes.  ``input_bytes_whole_image`` is the retired
+    whole-image-resident dataflow (every grid cell re-read the padded image),
+    reported so the benchmark trajectory has a before/after column.  The
+    components sum to ``program.hbm_bytes(batch, streamed=streamed)``
+    (asserted in ``tests/test_dataflow.py``).
+    """
+    a2 = batch * program.alpha ** 2
+    return {
+        "input_bytes_whole_image": program.input_hbm_bytes(
+            batch, whole_image=True
+        ),
+        "input_bytes_halo": program.input_hbm_bytes(batch),
+        "weight_bytes": 4 * (a2 if streamed else 1) * program.weight_floats(),
+        "output_bytes": 4 * batch * program.out_size ** 2 * program.n_out,
+        "skip_bytes": 4 * a2 * program.q_convs,
+    }

@@ -36,6 +36,11 @@ from .fusion import FusionSpec, receptive_window
 
 VMEM_BUDGET_BYTES = 16 * 1024 * 1024  # v5e per-core VMEM
 
+# Modeled HBM service rate of the cycle model's 100 MHz accelerator, in bytes
+# per cycle (6.4 GB/s).  Only ratios matter: the constant sets how expensive a
+# streamed-weight DMA is relative to the DS-1 compute cycles it overlaps with.
+HBM_BYTES_PER_CYCLE = 64
+
 
 # ---------------------------------------------------------------------------
 # Eq. (1) windows, affine in the output start coordinate
@@ -177,52 +182,66 @@ class TileProgram:
         — the slice table for streamed-weight launches."""
         return tuple(p.K * p.K * p.n_in * p.n_out for p in self.levels)
 
+    def _tile_floats(self) -> int:
+        """Per-grid-cell pyramid tile buffers: the level-0 halo tile landing
+        buffer (DMA destination), the live level-0 tile value, and every
+        level's conv/pool output tile."""
+        c0 = self.levels[0].n_in
+        floats = 2 * self.tile0 ** 2 * c0
+        for p in self.levels:
+            floats += p.out_size ** 2 * p.n_out
+            if p.pool is not None:
+                floats += p.pool_out ** 2 * p.n_out
+        return floats
+
     def vmem_bytes(self) -> int:
         """Resident working set of one kernel instance, in bytes.
 
-        Image block (whole padded image of one batch element) + all weights
-        ("filters are loaded into the kernel buffers only once", §3.3.1) +
-        the per-level tile buffers of the pyramid.
+        The input stays in HBM; only the level-0 halo tile (``tile0 x tile0``,
+        DMA'd per grid cell) is VMEM-resident, plus all weights ("filters are
+        loaded into the kernel buffers only once", §3.3.1) and the per-level
+        tile buffers of the pyramid.
         """
-        c0 = self.levels[0].n_in
-        floats = self.padded_input ** 2 * c0 + self.weight_floats()
-        floats += self.tile0 ** 2 * c0
-        for p in self.levels:
-            floats += p.out_size ** 2 * p.n_out
-            if p.pool is not None:
-                floats += p.pool_out ** 2 * p.n_out
+        return 4 * (self._tile_floats() + self.weight_floats())
+
+    def vmem_stream_bytes(self, slots: int = 1) -> int:
+        """Working set with per-level weight streaming: only ``slots`` copies
+        of the largest single level's weights are VMEM-resident at once
+        (DMA'd from HBM level by level; ``slots=2`` is the double-buffered
+        pipeline that overlaps level ``l+1``'s fetch with level ``l``'s
+        compute); biases stay resident.  The fallback when
+        :meth:`vmem_bytes` busts the budget — e.g. ResNet-18's last block,
+        whose two 512x512 3x3 weight tensors alone exceed 16 MiB."""
+        floats = self._tile_floats()
+        floats += slots * max(self.level_weight_counts())
+        floats += sum(p.n_out for p in self.levels)  # biases
         return 4 * floats
 
-    def vmem_stream_bytes(self) -> int:
-        """Working set with per-level weight streaming: only the largest
-        single level's weights are VMEM-resident at once (DMA'd from HBM into
-        a scratch buffer level by level); biases stay resident.  The fallback
-        when :meth:`vmem_bytes` busts the budget — e.g. ResNet-18's last
-        block, whose two 512x512 3x3 weight tensors alone exceed 16 MiB."""
+    def input_hbm_bytes(self, batch: int = 1, *, whole_image: bool = False) -> int:
+        """Per-launch input read traffic.  The halo-tile dataflow fetches one
+        ``tile0 x tile0`` tile per grid cell — ``alpha^2 * tile0^2 * C`` total,
+        overlap bounded by the pyramid halo (the uniform-stride minimum of
+        Algorithm 4).  ``whole_image=True`` is the retired whole-image-resident
+        model (every grid cell re-reads the padded image: ``alpha^2 * Hp * Wp *
+        C``), kept for before/after benchmark comparisons."""
         c0 = self.levels[0].n_in
-        floats = self.padded_input ** 2 * c0
-        floats += max(self.level_weight_counts())
-        floats += sum(p.n_out for p in self.levels)  # biases
-        floats += self.tile0 ** 2 * c0
-        for p in self.levels:
-            floats += p.out_size ** 2 * p.n_out
-            if p.pool is not None:
-                floats += p.pool_out ** 2 * p.n_out
-        return 4 * floats
+        tile = self.padded_input ** 2 if whole_image else self.tile0 ** 2
+        return 4 * batch * self.alpha ** 2 * tile * c0
 
     def hbm_bytes(self, batch: int = 1, *, streamed: bool = False) -> int:
-        """Off-chip traffic of one launch: read input map + weights, write
+        """Off-chip traffic of one launch: read halo tiles + weights, write
         output map + skip flags.  Chained launches pay this per chunk — the
         intermediate maps crossing HBM are exactly what fusion removes.
         Streamed-weight launches re-read the weights once per grid cell."""
-        c0 = self.levels[0].n_in
         w_reads = batch * self.alpha ** 2 if streamed else 1
-        read = batch * self.padded_input ** 2 * c0 + w_reads * self.weight_floats()
         write = (
             batch * self.out_size ** 2 * self.n_out
             + batch * self.alpha ** 2 * self.q_convs  # int32 skip flags
         )
-        return 4 * (read + write)
+        return (
+            self.input_hbm_bytes(batch)
+            + 4 * (w_reads * self.weight_floats() + write)
+        )
 
 
 def compile_program(spec: FusionSpec, out_region: int) -> TileProgram:
@@ -316,12 +335,18 @@ class LaunchPlan:
     The plan-costing hook consumed by the auto-partitioner
     (:mod:`repro.net.partition`) and the kernel wrapper
     (:mod:`repro.kernels.fused_conv.ops`): region choice *and* weight regime
-    (resident vs streamed) are decided here, once, so planner cost and
-    launched kernel can never disagree.
+    (resident vs streamed, and with how many stream slots) are decided here,
+    once, so planner cost and launched kernel can never disagree.
+
+    ``w_slots`` only matters when ``streamed``: 2 is the double-buffered
+    weight pipeline (level ``l+1``'s DMA overlaps level ``l``'s compute), 1
+    the blocking start();wait() fallback when two copies of the largest
+    level's weights bust VMEM.
     """
 
     program: TileProgram
     streamed: bool
+    w_slots: int = 1
 
     @property
     def spec(self) -> FusionSpec:
@@ -333,18 +358,36 @@ class LaunchPlan:
 
     def vmem_bytes(self) -> int:
         if self.streamed:
-            return self.program.vmem_stream_bytes()
+            return self.program.vmem_stream_bytes(self.w_slots)
         return self.program.vmem_bytes()
 
     def hbm_bytes(self, batch: int = 1) -> int:
         return self.program.hbm_bytes(batch, streamed=self.streamed)
 
     def modeled_cycles(self, batch: int = 1) -> int:
-        """DS-1 cycle model (Eq. 3) over the launch's uniform-stride grid —
-        the latency tiebreaker of the partitioner's dynamic program."""
+        """Overlap-aware cycle cost over the launch's uniform-stride grid —
+        the latency tiebreaker of the partitioner's dynamic program.
+
+        Per movement: DS-1 compute cycles (Eq. 3), plus the streamed-weight
+        DMA cost at :data:`HBM_BYTES_PER_CYCLE`.  With a double-buffered
+        pipeline (``w_slots=2``) only level 0's DMA (the pipeline ``fill``)
+        is exposed and the rest hides behind compute —
+        ``fill + max(compute, dma - fill)``, never worse than the
+        single-slot fallback's serialized ``compute + dma``.  Resident
+        weights pay no per-movement DMA."""
         from .cycle_model import ds1_cycles_per_movement
 
-        return batch * self.program.alpha ** 2 * ds1_cycles_per_movement(self.spec)
+        compute = ds1_cycles_per_movement(self.spec)
+        per_mv = compute
+        if self.streamed:
+            cnts = self.program.level_weight_counts()
+            dma = -(-4 * sum(cnts) // HBM_BYTES_PER_CYCLE)
+            if self.w_slots > 1:
+                fill = -(-4 * cnts[0] // HBM_BYTES_PER_CYCLE)
+                per_mv = fill + max(compute, dma - fill)
+            else:
+                per_mv = compute + dma
+        return batch * self.program.alpha ** 2 * per_mv
 
 
 def plan_launch(
@@ -357,9 +400,11 @@ def plan_launch(
     """Pick the launch configuration for one pyramid: an exactly-tiling
     output region whose program fits the VMEM budget, preferring
     fully-resident weights over per-level streaming (which re-reads weights
-    once per grid cell).  ``prefer_region="largest"`` (default) minimizes
-    grid overhead; ``"smallest"`` is the paper's smallest-tile preference —
-    maximal tile grids, i.e. END skipping at its finest granularity.
+    once per grid cell), and double-buffered streaming (DMA overlapped with
+    compute) over the blocking single-slot fallback.
+    ``prefer_region="largest"`` (default) minimizes grid overhead;
+    ``"smallest"`` is the paper's smallest-tile preference — maximal tile
+    grids, i.e. END skipping at its finest granularity.
     Returns ``None`` when no single launch fits."""
     assert prefer_region in ("largest", "smallest")
     out_size = spec.feature_sizes()[-1]
@@ -371,10 +416,14 @@ def plan_launch(
         if prog.vmem_bytes() <= vmem_budget:
             return LaunchPlan(program=prog, streamed=False)
     if allow_stream:
+        # region preference stays primary (a smaller region multiplies the
+        # alpha^2 streamed weight re-reads); within a region prefer the
+        # double-buffered two-slot pipeline over the blocking single slot
         for r in regions:
             prog = compile_program(spec, r)
-            if prog.vmem_stream_bytes() <= vmem_budget:
-                return LaunchPlan(program=prog, streamed=True)
+            for slots in (2, 1):
+                if prog.vmem_stream_bytes(slots) <= vmem_budget:
+                    return LaunchPlan(program=prog, streamed=True, w_slots=slots)
     return None
 
 

@@ -1,21 +1,24 @@
 """Pallas TPU kernel: variadic USEFUSE fusion pyramid (conv+ReLU[+pool] x Q).
 
 The paper's fused-layer dataflow, adapted to the TPU memory hierarchy
-(DESIGN.md §2): one grid cell computes one fusion-pyramid tile end to end —
-every intermediate level stays in VMEM (the TPU analogue of "no off-chip
-intermediate traffic") for *any* pyramid depth Q >= 1, including odd Q and
-ResNet-style conv-only pairs.  The grid is the uniform-stride tile plan: the
-``alpha x alpha`` movement grid with identical movement counts at every level
-is exactly Algorithm 4's uniform stride, realized as a Pallas grid.
+(DESIGN.md §2, §8): one grid cell computes one fusion-pyramid tile end to
+end — every intermediate level stays in VMEM (the TPU analogue of "no
+off-chip intermediate traffic") for *any* pyramid depth Q >= 1, including odd
+Q and ResNet-style conv-only pairs.  The grid is the uniform-stride tile
+plan: the ``alpha x alpha`` movement grid with identical movement counts at
+every level is exactly Algorithm 4's uniform stride, realized as a Pallas
+grid.
 
 The kernel is compiled from a :class:`~repro.core.program.TileProgram` — the
 single tile-program lowering shared with the value-level executor — and
 receives one ``ConvLevelProg`` per conv level (pool epilogues folded in).
 
 Per grid cell (b, i, j):
-  * the image block (whole padded image of batch b) is VMEM-resident; the
-    level-0 tile is cut with dynamic slices at ``i*stride0`` (tile stride S^T
-    from the plan);
+  * the input stays in HBM (memory space ANY); the level-0 halo tile
+    (``tile0 x tile0``, neighbours overlapping by the pyramid halo) is DMA'd
+    into a VMEM landing buffer with ``make_async_copy`` at offset
+    ``(i*stride0, j*stride0)`` — per-cell input traffic is ``tile0^2 * C``
+    (Algorithm 4's uniform minimal movement), not the whole padded image;
   * conv levels run as K*K unrolled strided-slice + MXU dot-general
     (``(P, Cin) @ (Cin, Cout)``) accumulations — the WPU array of Fig. 5 maps
     onto MXU tiles;
@@ -31,9 +34,27 @@ Per grid cell (b, i, j):
     with non-positive downstream biases short-circuits the whole remaining
     pyramid.  A per-level skip flag is emitted for energy/cycle statistics.
 
-Weights live whole in VMEM ("filters are loaded into the kernel buffers only
-once", §3.3.1); the VMEM working set is accounted by
-:meth:`~repro.core.program.TileProgram.vmem_bytes` and asserted in ops.py.
+Weight regimes ("filters are loaded into the kernel buffers only once",
+§3.3.1, vs the VMEM-busting fallback):
+  * resident — all weights live whole in VMEM for the launch;
+  * streamed, double-buffered (``w_slots=2``) — weights stay in HBM as one
+    flat array; level ``l+1``'s slice is DMA'd into the idle scratch slot
+    before level ``l``'s MXU pass so the transfer hides behind compute
+    (START-wait-flip).  The prefetch for level ``l+1`` is issued inside level
+    ``l``'s *live* branch, so a cascade of END-skipped levels issues no
+    weight DMAs at all; the one speculative case (level ``l`` live but its
+    output all zero) drains the already-started DMA in the skip branch to
+    keep semaphores balanced;
+  * streamed, single-slot (``w_slots=1``) — blocking start();wait() per live
+    level, when even two copies of the largest level's weights bust VMEM
+    (e.g. ResNet-18's 512-channel block).
+
+The VMEM working set of each regime is accounted by
+:meth:`~repro.core.program.TileProgram.vmem_bytes` /
+:meth:`~repro.core.program.TileProgram.vmem_stream_bytes` and asserted in
+ops.py; the regime itself is chosen once by
+:func:`~repro.core.program.plan_launch` so planner cost and launched kernel
+can never disagree.
 """
 
 from __future__ import annotations
@@ -45,6 +66,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import resolve_interpret
 from repro.core.program import ConvLevelProg, TileProgram  # noqa: F401 (re-export)
 
 
@@ -111,62 +133,96 @@ def _pyramid_kernel(
     relu: bool,
     end_skip: bool,
     stream: bool,
+    w_slots: int,
+    cnts: tuple[int, ...],
 ):
     q = len(progs)
-    x_ref = refs[0]
+    x_hbm = refs[0]
     if stream:
         # weights arrive as one flat HBM-space array; each level's slice is
-        # DMA'd into the shared VMEM scratch just before it is needed.
+        # DMA'd into one of the w_slots VMEM scratch slots.
         wflat_ref = refs[1]
         b_refs = refs[2 : 2 + q]
         out_ref, skip_ref = refs[2 + q], refs[3 + q]
-        w_scratch, w_sem = refs[4 + q], refs[5 + q]
+        x_scratch, x_sem = refs[4 + q], refs[5 + q]
+        w_scratch, w_sem = refs[6 + q], refs[7 + q]
     else:
         w_refs = refs[1 : 1 + 2 * q : 2]
         b_refs = refs[2 : 2 + 2 * q : 2]
         out_ref, skip_ref = refs[1 + 2 * q], refs[2 + 2 * q]
+        x_scratch, x_sem = refs[3 + 2 * q], refs[4 + 2 * q]
+    bi = pl.program_id(0)
     i = pl.program_id(1)
     j = pl.program_id(2)
     idx = (i, j)
 
-    # ---- level-0 tile from the VMEM-resident image block ----
-    t = x_ref[0, pl.ds(i * stride0, tile0), pl.ds(j * stride0, tile0), :]
+    offs = [sum(cnts[:l]) for l in range(q)]
+
+    def w_dma(l):
+        """DMA descriptor for level l's weight slice into its scratch slot."""
+        return pltpu.make_async_copy(
+            wflat_ref.at[pl.ds(offs[l], cnts[l])],
+            w_scratch.at[l % w_slots, pl.ds(0, cnts[l])],
+            w_sem.at[l % w_slots],
+        )
+
+    # ---- halo tile fetch: HBM -> VMEM landing buffer, overlapped with the
+    # level-0 weight DMA in the double-buffered streamed regime ----
+    x_dma = pltpu.make_async_copy(
+        x_hbm.at[bi, pl.ds(i * stride0, tile0), pl.ds(j * stride0, tile0), :],
+        x_scratch,
+        x_sem,
+    )
+    x_dma.start()
+    if stream and w_slots > 1:
+        w_dma(0).start()  # pipeline warm-up: level 0 always computes
+    x_dma.wait()
+    t = x_scratch[...]
 
     skips = []
-    w_off = 0
+    # per level: None = statically live (always computed), else the traced
+    # liveness predicate — the prefetch-bookkeeping contract: level l+1's
+    # weight DMA was issued iff level l ran its live branch.
+    live_flags: list = []
     for l, prog in enumerate(progs):
-        cnt = prog.K * prog.K * prog.n_in * prog.n_out
+        prev_live = live_flags[l - 1] if l else None
+        statically_live = l == 0 or not (end_skip and relu)
         if stream:
-            # fetch lazily inside the live branch: an END-skipped level must
-            # not pay its HBM weight read either
-            def fetch_w(w_off=w_off, cnt=cnt, prog=prog):
-                dma = pltpu.make_async_copy(
-                    wflat_ref.at[pl.ds(w_off, cnt)],
-                    w_scratch.at[pl.ds(0, cnt)],
-                    w_sem,
-                )
-                dma.start()
-                dma.wait()
-                return w_scratch[0:cnt].reshape(
+            def fetch_w(l=l, prog=prog, cnt=cnts[l], prev_live=prev_live):
+                # called inside level l's live branch only
+                if w_slots > 1:
+                    if l > 0 and prev_live is not None:
+                        # predecessor skipped => no prefetch: fetch on demand
+                        @pl.when(jnp.logical_not(prev_live))
+                        def _():
+                            w_dma(l).start()
+                else:
+                    w_dma(l).start()
+                w_dma(l).wait()
+                return w_scratch[l % w_slots, 0:cnt].reshape(
                     prog.K, prog.K, prog.n_in, prog.n_out
                 )
-
-            w_off += cnt
         else:
             def fetch_w(l=l):
                 return w_refs[l][...]
 
         b = b_refs[l][...]
 
-        def run_level(t_in, fetch_w=fetch_w, b=b, prog=prog):
-            tl = _conv_tile(t_in, fetch_w(), b, prog.K, prog.S, prog.out_size)
+        def run_level(t_in, fetch_w=fetch_w, b=b, prog=prog, l=l):
+            w = fetch_w()
+            if stream and w_slots > 1 and l + 1 < q:
+                # double-buffer flip: start the next level's weight DMA into
+                # the idle slot before this level's K^2 MXU pass
+                w_dma(l + 1).start()
+            tl = _conv_tile(t_in, w, b, prog.K, prog.S, prog.out_size)
             if relu:
                 tl = jnp.maximum(tl, 0.0)
             return _level_epilogue(tl, idx, prog)
 
-        if l == 0 or not (end_skip and relu):
+        if statically_live:
             # level 0 always computes; without ReLU the all-zero test is not
             # a sound skip predicate (negatives would survive).
+            live_flags.append(None)
             skips.append(jnp.int32(0))
             t = run_level(t)
         else:
@@ -175,13 +231,22 @@ def _pyramid_kernel(
             # literally the zero tensor — @cond skips the K^2 MXU pass and
             # emits the closed form instead, bit-exactly.
             live = jnp.max(t) > 0.0
+            live_flags.append(live)
             skips.append(jnp.where(live, 0, 1).astype(jnp.int32))
-            t = jax.lax.cond(
-                live,
-                run_level,
-                lambda t_in, b=b, prog=prog: _const_level(idx, prog, b, relu),
-                t,
-            )
+
+            def skip_level(t_in, b=b, prog=prog, l=l, prev_live=prev_live):
+                if stream and w_slots > 1:
+                    # drain the speculative prefetch (issued iff the previous
+                    # level ran live) so the semaphore stays balanced
+                    if prev_live is None:
+                        w_dma(l).wait()
+                    else:
+                        @pl.when(prev_live)
+                        def _():
+                            w_dma(l).wait()
+                return _const_level(idx, prog, b, relu)
+
+            t = jax.lax.cond(live, run_level, skip_level, t)
 
     out_ref[0, :, :, :] = t
     skip_ref[0, 0, 0, :] = jnp.stack(skips)
@@ -195,24 +260,43 @@ def fused_pyramid_pallas(
     program: TileProgram,
     relu: bool = True,
     end_skip: bool = True,
-    interpret: bool = True,
+    interpret: bool | None = None,
     stream_weights: bool = False,
+    w_slots: int = 2,
+    weights_flat: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Launch the variadic fused pyramid over the (B, alpha, alpha) grid.
 
-    Weights/biases are flat per-conv-level lists, index-aligned with
-    ``program.levels``.  With ``stream_weights`` the weights stay in HBM
-    (memory space ANY) and each level's tensor is DMA'd into a shared VMEM
-    scratch on demand — the fallback when the fully-resident working set
-    busts the VMEM budget (see ``TileProgram.vmem_stream_bytes``).
+    The input stays in HBM; each grid cell DMAs its ``tile0 x tile0`` halo
+    tile into VMEM.  Weights/biases are flat per-conv-level lists,
+    index-aligned with ``program.levels``.  With ``stream_weights`` the
+    weights stay in HBM (memory space ANY) and each level's tensor is DMA'd
+    into one of ``w_slots`` shared VMEM scratch slots — double-buffered
+    (prefetch overlapping compute) when ``w_slots == 2`` — the fallback when
+    the fully-resident working set busts the VMEM budget (see
+    ``TileProgram.vmem_stream_bytes``).  ``weights_flat`` supplies the
+    pre-flattened concatenated weights (see
+    :func:`repro.kernels.fused_conv.ops.flatten_weights`) so plan-driven
+    callers don't re-concatenate per step; ``interpret=None`` auto-resolves
+    to compiled on TPU, interpreted elsewhere.
 
     Returns ``(out, skip)`` with ``skip`` shaped ``(B, alpha, alpha, Q)`` —
     ``skip[..., l] == 1`` where level ``l``'s conv was short-circuited by the
     END cascade (level 0 never skips).
     """
-    B, Hp, Wp, C = x_padded.shape
+    B = x_padded.shape[0]
     q = program.q_convs
-    assert len(weights) == len(biases) == q, "one (w, b) pair per conv level"
+    assert len(biases) == q, "one bias per conv level"
+    if weights_flat is None:
+        assert len(weights) == q, "one weight tensor per conv level"
+    else:
+        assert weights_flat.size == sum(program.level_weight_counts()), (
+            "weights_flat does not match the program's level weight counts"
+        )
+    assert x_padded.shape[1] == x_padded.shape[2] == program.padded_input, (
+        "x_padded spatial dims must equal the program's padded input"
+    )
+    c0 = program.levels[0].n_in
     alpha, out_region = program.alpha, program.out_region
     m_out = program.n_out
     kernel = functools.partial(
@@ -223,19 +307,28 @@ def fused_pyramid_pallas(
         relu=relu,
         end_skip=end_skip,
         stream=stream_weights,
+        w_slots=w_slots,
+        cnts=program.level_weight_counts(),
     )
-    in_specs = [pl.BlockSpec((1, Hp, Wp, C), lambda b, i, j: (b, 0, 0, 0))]
+    in_specs = [pl.BlockSpec(memory_space=pltpu.ANY)]
     operands: list[jnp.ndarray] = [x_padded]
-    scratch_shapes: list = []
+    scratch_shapes: list = [
+        pltpu.VMEM((program.tile0, program.tile0, c0), jnp.float32),
+        pltpu.SemaphoreType.DMA,
+    ]
     if stream_weights:
         in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
-        operands.append(jnp.concatenate([w.reshape(-1) for w in weights]))
+        if weights_flat is None:
+            weights_flat = jnp.concatenate([w.reshape(-1) for w in weights])
+        operands.append(weights_flat)
         for bias in biases:
             in_specs.append(pl.BlockSpec(bias.shape, lambda b, i, j: (0,)))
             operands.append(bias)
-        scratch_shapes = [
-            pltpu.VMEM((max(program.level_weight_counts()),), jnp.float32),
-            pltpu.SemaphoreType.DMA,
+        scratch_shapes += [
+            pltpu.VMEM(
+                (w_slots, max(program.level_weight_counts())), jnp.float32
+            ),
+            pltpu.SemaphoreType.DMA((w_slots,)),
         ]
     else:
         for w, bias in zip(weights, biases):
@@ -259,6 +352,6 @@ def fused_pyramid_pallas(
             jax.ShapeDtypeStruct((B, alpha, alpha, q), jnp.int32),
         ],
         scratch_shapes=scratch_shapes,
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(*operands)
     return out, skip

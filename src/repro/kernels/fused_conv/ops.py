@@ -34,11 +34,20 @@ from repro.core.program import (
 from .fused_conv import fused_pyramid_pallas
 
 
+def flatten_weights(weights: list) -> jnp.ndarray:
+    """Concatenate per-level weight tensors into the flat float32 array the
+    streamed-weight kernel DMAs from.  Plan-driven callers (the network
+    runner) call this once per model instead of once per launch."""
+    return jnp.concatenate(
+        [jnp.asarray(w, jnp.float32).reshape(-1) for w in weights]
+    )
+
+
 @partial(
     jax.jit,
     static_argnames=(
-        "spec", "out_region", "streamed", "relu", "end_skip", "interpret",
-        "vmem_budget",
+        "spec", "out_region", "streamed", "w_slots", "relu", "end_skip",
+        "interpret", "vmem_budget",
     ),
 )
 def fused_pyramid(
@@ -49,21 +58,28 @@ def fused_pyramid(
     spec: FusionSpec,
     out_region: int | None = None,
     streamed: bool | None = None,
+    w_slots: int | None = None,
     relu: bool = True,
     end_skip: bool = True,
-    interpret: bool = True,
+    interpret: bool | None = None,
     vmem_budget: int = VMEM_BUDGET_BYTES,
+    weights_flat: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Fused Q-conv pyramid forward as a single kernel launch.
 
     ``x``: (B, H, W, C) NHWC; ``weights[l]``: (K, K, Cin, Cout) and
     ``biases[l]``: (Cout,) per conv level, in chain order.  ``out_region``
     must tile the final output exactly; ``None`` picks the largest region
-    fitting the VMEM budget.  ``streamed`` pins the weight regime (the
-    plan-driven entry used by :mod:`repro.net.runner`, whose
-    :class:`~repro.core.program.LaunchPlan` already decided it); ``None``
-    derives it from the budget.  Returns ``(out, skip)`` with ``skip``:
-    (B, alpha, alpha, Q) int32 END-cascade flags (level 0 never skips).
+    fitting the VMEM budget.  ``streamed`` / ``w_slots`` pin the weight
+    regime (the plan-driven entry used by :mod:`repro.net.runner`, whose
+    :class:`~repro.core.program.LaunchPlan` already decided them); ``None``
+    derives them from the budget (double-buffered streaming preferred over
+    the blocking single slot).  ``weights_flat`` optionally supplies the
+    pre-flattened streamed weights (:func:`flatten_weights`) to keep the
+    concatenation out of the per-call path.  ``interpret=None`` resolves to
+    compiled on TPU, interpreted on CPU/GPU.  Returns ``(out, skip)`` with
+    ``skip``: (B, alpha, alpha, Q) int32 END-cascade flags (level 0 never
+    skips).
     """
     if out_region is None:
         lp = plan_launch(spec, vmem_budget=vmem_budget)
@@ -73,9 +89,15 @@ def fused_pyramid(
         out_region = lp.out_region
         if streamed is None:
             streamed = lp.streamed
+            if w_slots is None:
+                w_slots = lp.w_slots
     prog = compile_program(spec, out_region)
     stream = prog.vmem_bytes() > vmem_budget if streamed is None else streamed
-    vmem = prog.vmem_stream_bytes() if stream else prog.vmem_bytes()
+    if stream and w_slots is None:
+        w_slots = 2 if prog.vmem_stream_bytes(2) <= vmem_budget else 1
+    if not stream:
+        w_slots = 1  # unused by the resident kernel; pin for the jit key
+    vmem = prog.vmem_stream_bytes(w_slots) if stream else prog.vmem_bytes()
     assert vmem <= vmem_budget, (
         f"working set {vmem} exceeds VMEM"
         + ("" if stream else "; retry with streamed weights or")
@@ -94,6 +116,8 @@ def fused_pyramid(
         end_skip=end_skip,
         interpret=interpret,
         stream_weights=stream,
+        w_slots=w_slots,
+        weights_flat=weights_flat,
     )
 
 
@@ -108,7 +132,7 @@ def fused_conv2(
     out_region: int,
     relu: bool = True,
     end_skip: bool = True,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Fused 2-conv pyramid forward — compatibility wrapper.
 
@@ -196,7 +220,7 @@ def fused_pyramid_chain(
     out_regions: list[int] | None = None,
     relu: bool = True,
     end_skip: bool = True,
-    interpret: bool = True,
+    interpret: bool | None = None,
     vmem_budget: int = VMEM_BUDGET_BYTES,
     max_convs_per_chunk: int | None = None,
 ):

@@ -12,6 +12,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import resolve_interpret
 from .online_sop import online_sop_end_pallas
 
 LANE = 128
@@ -23,13 +24,15 @@ def online_sop_end(
     y: jnp.ndarray,
     n_digits: int = 16,
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Digit-serial SOP + END over arbitrary batch dims.
 
     ``x``: (..., m) serial operands in (-1, 1); ``y``: (m,) parallel weights.
+    ``interpret=None`` resolves to compiled on TPU, interpreted elsewhere.
     Returns (sop (...,), term_cycle (...,), detected (...,)).
     """
+    interpret = resolve_interpret(interpret)
     batch_shape = x.shape[:-1]
     m = x.shape[-1]
     pad_m = (-m) % LANE

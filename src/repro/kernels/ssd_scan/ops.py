@@ -14,12 +14,16 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import resolve_interpret
 from .ssd_scan import ssd_scan_pallas
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd_scan(x, dt, A, B, C, D, *, chunk: int = 64, interpret: bool = True):
-    """SSD over (b,S,H,P); pads S to a chunk multiple internally."""
+def ssd_scan(x, dt, A, B, C, D, *, chunk: int = 64,
+             interpret: bool | None = None):
+    """SSD over (b,S,H,P); pads S to a chunk multiple internally.
+    ``interpret=None`` resolves to compiled on TPU, interpreted elsewhere."""
+    interpret = resolve_interpret(interpret)
     b, S, H, P = x.shape
     ch = min(chunk, S)
     pad = (-S) % ch

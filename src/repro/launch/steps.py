@@ -7,8 +7,6 @@ shardable, no allocation) for the dry-run and the launchers.
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp

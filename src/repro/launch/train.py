@@ -13,16 +13,14 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import get_config
-from repro.data.pipeline import DataConfig, Pipeline, batch_at
+from repro.data.pipeline import DataConfig, batch_at
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import make_train_step
 from repro.models.model import build_param_specs, init_params
-from repro.optim.adamw import AdamWState
 from repro.parallel.constraints import mesh_rules
 from repro.parallel.sharding import (
     ShardingRules,

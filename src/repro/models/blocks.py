@@ -8,7 +8,7 @@ stacked params by :mod:`repro.models.model`.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any
 
 import jax

@@ -20,7 +20,6 @@ path in serve.py keeps decode sub-quadratic.
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

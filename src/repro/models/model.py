@@ -16,8 +16,6 @@ Remat: ``cfg.remat`` wraps the scanned bodies with jax.checkpoint
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp

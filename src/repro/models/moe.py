@@ -20,7 +20,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .layers import swiglu
 
 
 def route_topk(logits: jnp.ndarray, top_k: int):

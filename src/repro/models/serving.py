@@ -19,14 +19,13 @@ position.
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from . import params as prm
-from .model import _dtype, _hymba_segments, forward
+from .model import _dtype, forward
 from .params import P
 
 

@@ -24,12 +24,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.fused_conv.ops import fused_pyramid
+from repro.kernels.fused_conv.ops import flatten_weights, fused_pyramid
 
 from .graph import Graph, Node, infer_shapes
 from .partition import PartitionPlan, auto_partition
 
 Params = dict[str, tuple[jnp.ndarray, jnp.ndarray]]
+
+# key prefix of pre-flattened streamed-weight arrays in a params dict
+_FLAT = "_flat/"
 
 
 def init_network_params(graph: Graph, key: jax.Array, scale: float = 1.0) -> Params:
@@ -101,6 +104,27 @@ def reference_network(x: jnp.ndarray, graph: Graph, params: Params) -> jnp.ndarr
     return values[graph.output.name]
 
 
+def prepare_network_params(plan: PartitionPlan, params: Params) -> Params:
+    """Pre-flatten the streamed pyramids' weights once per model.
+
+    Streamed launches DMA from one flat concatenated weight array; without
+    this step every ``run_network`` call re-concatenates it inside the jit
+    graph.  Returns a new params dict with one ``"_flat/<pyramid>"`` entry
+    per streamed pyramid (consumed by :func:`run_network`; plain entries are
+    untouched, so the dict remains a valid pytree for the reference path).
+    """
+    out: Params = dict(params)
+    graph = plan.graph
+    for pyr in plan.pyramids:
+        if not pyr.launch.streamed:
+            continue
+        conv_names = [m for m in pyr.node_names if graph.node(m).op == "conv"]
+        out[_FLAT + pyr.name] = flatten_weights(
+            [params[m][0] for m in conv_names]
+        )
+    return out
+
+
 @partial(jax.jit, static_argnames=("plan", "end_skip", "interpret"))
 def run_network(
     x: jnp.ndarray,
@@ -108,13 +132,16 @@ def run_network(
     *,
     plan: PartitionPlan,
     end_skip: bool = True,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
     """Execute the partition plan end to end for a batch ``x`` (B, H, W, C).
 
-    Returns ``(logits, skips)``: ``skips[pyramid.name]`` is that launch's
-    ``(B, alpha, alpha, Q)`` int32 END-cascade flag map (level 0 of each
-    pyramid never skips).  Aggregate with :func:`skip_fractions`.
+    ``interpret=None`` resolves per backend (compiled on TPU).  Params may
+    come through :func:`prepare_network_params` so streamed launches reuse
+    the pre-flattened weight arrays.  Returns ``(logits, skips)``:
+    ``skips[pyramid.name]`` is that launch's ``(B, alpha, alpha, Q)`` int32
+    END-cascade flag map (level 0 of each pyramid never skips).  Aggregate
+    with :func:`skip_fractions`.
     """
     graph = plan.graph
     covered = plan.covered()
@@ -134,10 +161,12 @@ def run_network(
                 spec=pyr.spec,
                 out_region=pyr.launch.out_region,
                 streamed=pyr.launch.streamed,
+                w_slots=pyr.launch.w_slots if pyr.launch.streamed else None,
                 relu=pyr.relu,
                 end_skip=end_skip,
                 interpret=interpret,
                 vmem_budget=plan.vmem_budget,
+                weights_flat=params.get(_FLAT + pyr.name),
             )
             values[pyr.node_names[-1]] = y
             skips[pyr.name] = skip
@@ -168,7 +197,7 @@ def run_model(
     num_classes: int | None = None,
     plan: PartitionPlan | None = None,
     seed: int = 0,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Convenience one-shot: build the zoo graph, auto-partition, run.
 
@@ -187,5 +216,6 @@ def run_model(
         plan = auto_partition(graph, batch=x.shape[0])
     if params is None:
         params = init_network_params(graph, jax.random.PRNGKey(seed))
-    logits, skips = run_network(x, params, plan=plan, interpret=interpret)
+    prepped = prepare_network_params(plan, params)
+    logits, skips = run_network(x, prepped, plan=plan, interpret=interpret)
     return logits, skips, plan, params

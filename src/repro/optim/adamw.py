@@ -14,8 +14,7 @@ moves 1/4 of the bytes.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

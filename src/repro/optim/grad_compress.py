@@ -16,8 +16,7 @@ moves int8, not fp32, across the 'pod' axis for the terms it reduces late).
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -23,7 +23,7 @@ Default rule set (production mesh (pod, data, model)):
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field
 from typing import Any
 
 import jax

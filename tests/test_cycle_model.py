@@ -9,7 +9,6 @@ from repro.core.cnn_models import (
     VGG_FUSION,
 )
 from repro.core.cycle_model import (
-    DEFAULT_PARAMS,
     evaluate_design,
     single_layer_result,
 )

@@ -1,7 +1,6 @@
 """Fused executor vs monolithic reference — exactness on all networks."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

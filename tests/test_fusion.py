@@ -1,6 +1,5 @@
 """Fusion-planner tests: Eq. (1), Algorithms 3-4, paper-value reproduction."""
 
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cnn_models import (

@@ -1,12 +1,10 @@
 """End-to-end system tests: training loop + checkpoint/restart + analyzer."""
 
-import json
 import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 
 class TestTrainLoop:

@@ -6,7 +6,6 @@ plan — padded stem pool, residual adds, projection shortcuts, streamed
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.net.graph import lenet5, resnet18, vgg16
 from repro.net.partition import auto_partition, layerwise_partition
