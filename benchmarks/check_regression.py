@@ -1,0 +1,115 @@
+"""CI perf-regression gate for the benchmark trajectory.
+
+Compares a freshly generated ``BENCH_pyramid.json`` (``benchmarks.run
+--dry-run`` is enough: the gated quantities are all analytic) against the
+committed baseline ``benchmarks/baseline.json`` and fails when any gated
+metric *regresses* by more than ``--tolerance`` (default 10%):
+
+* ``kernel_dataflow.launches.<workload>``: ``hbm_bytes_total``,
+  ``modeled_cycles``, ``input_bytes_halo`` — per-launch off-chip traffic and
+  pipeline-aware modeled latency of each tracked kernel workload;
+* ``partition.<model>.auto``: ``hbm_bytes``, ``modeled_latency_us`` — the
+  auto-partitioner's whole-network plan quality for every zoo model.
+
+Lower is better for every gated metric, so improvements always pass; a
+genuine improvement should be locked in by refreshing the baseline with
+``--update`` and committing the result.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.run --dry-run
+    python -m benchmarks.check_regression            # gate (CI)
+    python -m benchmarks.check_regression --update   # reseed the baseline
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+BASELINE = pathlib.Path(__file__).with_name("baseline.json")
+
+LAUNCH_METRICS = ("hbm_bytes_total", "modeled_cycles", "input_bytes_halo")
+PARTITION_METRICS = ("hbm_bytes", "modeled_latency_us")
+
+
+def gated_metrics(bench: dict) -> dict[str, float]:
+    """Flatten the gated (name -> lower-is-better value) metric map."""
+    out: dict[str, float] = {}
+    for name, row in bench["kernel_dataflow"]["launches"].items():
+        for m in LAUNCH_METRICS:
+            out[f"kernel_dataflow/{name}/{m}"] = float(row[m])
+    for model, rows in bench["partition"].items():
+        for m in PARTITION_METRICS:
+            out[f"partition/{model}/auto/{m}"] = float(rows["auto"][m])
+    return out
+
+
+def compare(current: dict, baseline: dict, tolerance: float) -> list[str]:
+    """Regressions (worse than baseline by > tolerance) as report lines."""
+    cur, base = gated_metrics(current), gated_metrics(baseline)
+    failures = []
+    for key, base_val in sorted(base.items()):
+        if key not in cur:
+            failures.append(f"{key}: missing from current benchmark output")
+            continue
+        if cur[key] > base_val * (1.0 + tolerance):
+            failures.append(
+                f"{key}: {cur[key]:g} vs baseline {base_val:g} "
+                f"(+{(cur[key] / base_val - 1.0):.1%} > {tolerance:.0%})"
+            )
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench", default="BENCH_pyramid.json",
+                    help="freshly generated benchmark JSON to gate")
+    ap.add_argument("--baseline", default=str(BASELINE),
+                    help="committed baseline JSON")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed fractional regression (default 0.10)")
+    ap.add_argument("--update", action="store_true",
+                    help="reseed the baseline from --bench instead of gating")
+    args = ap.parse_args(argv)
+
+    with open(args.bench) as f:
+        bench = json.load(f)
+
+    if args.update:
+        slim = {
+            # launches only: the wallclock subsection is machine-dependent
+            # timing noise and is never gated
+            "kernel_dataflow": {
+                "launches": bench["kernel_dataflow"]["launches"]
+            },
+            "partition": {
+                model: {"auto": rows["auto"]}
+                for model, rows in bench["partition"].items()
+            },
+        }
+        with open(args.baseline, "w") as f:
+            json.dump(slim, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"baseline reseeded: {args.baseline} "
+              f"({len(gated_metrics(slim))} gated metrics)")
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = compare(bench, baseline, args.tolerance)
+    if failures:
+        print(f"PERF REGRESSION vs {args.baseline} "
+              f"(tolerance {args.tolerance:.0%}):")
+        for line in failures:
+            print(f"  {line}")
+        return 1
+    n = len(gated_metrics(baseline))
+    print(f"perf gate OK: {n} metrics within {args.tolerance:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -82,10 +82,13 @@ def _partition_comparison(csv=print) -> dict:
 def _kernel_dataflow(csv=print, dry_run: bool = True) -> dict:
     """Per-launch HBM dataflow of the fused-pyramid kernel: the retired
     whole-image-resident input model vs the halo-tile model (what the kernel
-    now actually moves), per regime, plus compiled-vs-interpret wall clock
-    when kernels may run.  The analytic rows are emitted even under
-    ``--dry-run`` so the CI smoke job can assert the section exists and the
-    bench trajectory has comparable numbers."""
+    now actually moves), per regime, the serial vs software-pipelined
+    (cross-cell input prefetch) modeled latency delta, plus
+    compiled-vs-interpret wall clock when kernels may run.  The analytic rows
+    are emitted even under ``--dry-run`` so the CI smoke job can assert the
+    section exists and the bench trajectory has comparable numbers."""
+    import dataclasses
+
     import jax
 
     from repro.core.cnn_models import (
@@ -112,6 +115,11 @@ def _kernel_dataflow(csv=print, dry_run: bool = True) -> dict:
         regime = (
             f"streamed_x{lp.w_slots}" if lp.streamed else "resident"
         )
+        cycles_serial = dataclasses.replace(lp, x_slots=1).modeled_cycles()
+        # only advertise the pipelined latency when the x_slots=2 kernel is
+        # actually buildable (the planner's own ladder rule) — otherwise the
+        # row reports the launched regime
+        cycles_pipe = lp.with_input_pipeline().modeled_cycles()
         row = {
             **flow,
             "alpha": lp.program.alpha,
@@ -119,11 +127,15 @@ def _kernel_dataflow(csv=print, dry_run: bool = True) -> dict:
             "tile0": lp.program.tile0,
             "streamed": lp.streamed,
             "w_slots": lp.w_slots,
+            "x_slots": lp.x_slots,
             "hbm_bytes_total": lp.hbm_bytes(),
             "input_reduction": (
                 flow["input_bytes_whole_image"] / flow["input_bytes_halo"]
             ),
             "modeled_cycles": lp.modeled_cycles(),
+            "modeled_cycles_serial": cycles_serial,
+            "modeled_cycles_pipelined": cycles_pipe,
+            "pipeline_cycles_saved": cycles_serial - cycles_pipe,
         }
         out["launches"][name] = row
         for model in ("whole_image", "halo"):
@@ -135,6 +147,11 @@ def _kernel_dataflow(csv=print, dry_run: bool = True) -> dict:
         csv(
             f"kernel_dataflow_reduction,{name},input,"
             f"{row['input_reduction']:.1f}x,alpha,{row['alpha']}"
+        )
+        csv(
+            f"kernel_dataflow_pipeline,{name},serial,{cycles_serial},"
+            f"pipelined,{cycles_pipe},saved,{row['pipeline_cycles_saved']},"
+            f"x_slots,{lp.x_slots}"
         )
 
     if not dry_run:

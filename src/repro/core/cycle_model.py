@@ -116,6 +116,29 @@ def ds2_cycles_per_movement(spec: FusionSpec, p: ArithParams = DEFAULT_PARAMS,
     return total + p.n
 
 
+def grid_pipeline_cycles(
+    cells: int, body: int, input_dma: int, *, pipelined: bool
+) -> int:
+    """Latency of one batch element's ``alpha^2``-cell movement grid given
+    per-cell compute(+weight-DMA) cycles ``body`` and per-cell input
+    halo-tile DMA cycles ``input_dma``.
+
+    Serial (``pipelined=False``): every cell blocks on its own input fetch —
+    ``(input_dma + body) * cells``.
+
+    Pipelined (``x_slots=2``, the revolving cross-cell landing buffer): cell
+    ``n`` starts cell ``n+1``'s fetch before its own pyramid, so the timeline
+    is warm-up fill, then ``cells - 1`` steady-state steps where the fetch
+    hides behind compute, then the drain cell's exposed compute:
+    ``input_dma + body + (cells - 1) * max(body, input_dma)``.  The saving
+    over serial is exactly ``(cells - 1) * min(body, input_dma)`` >= 0, zero
+    at ``cells == 1`` (a 1x1 grid has no successor to prefetch).
+    """
+    if not pipelined or cells <= 1:
+        return cells * (body + input_dma)
+    return input_dma + body + (cells - 1) * max(body, input_dma)
+
+
 # ---------------------------------------------------------------------------
 # Baseline models (documented assumptions in module docstring)
 # ---------------------------------------------------------------------------

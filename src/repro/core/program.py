@@ -30,7 +30,7 @@ hashable dataclasses suitable as jit static arguments.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 from .fusion import FusionSpec, receptive_window
 
@@ -182,40 +182,50 @@ class TileProgram:
         — the slice table for streamed-weight launches."""
         return tuple(p.K * p.K * p.n_in * p.n_out for p in self.levels)
 
-    def _tile_floats(self) -> int:
-        """Per-grid-cell pyramid tile buffers: the level-0 halo tile landing
-        buffer (DMA destination), the live level-0 tile value, and every
-        level's conv/pool output tile."""
+    def _tile_floats(self, x_slots: int = 1) -> int:
+        """Per-grid-cell pyramid tile buffers: ``x_slots`` level-0 halo-tile
+        landing buffers (DMA destinations; 2 = the revolving cross-cell
+        prefetch pipeline), the live level-0 tile value, and every level's
+        conv/pool output tile."""
         c0 = self.levels[0].n_in
-        floats = 2 * self.tile0 ** 2 * c0
+        floats = (1 + x_slots) * self.tile0 ** 2 * c0
         for p in self.levels:
             floats += p.out_size ** 2 * p.n_out
             if p.pool is not None:
                 floats += p.pool_out ** 2 * p.n_out
         return floats
 
-    def vmem_bytes(self) -> int:
+    def vmem_bytes(self, x_slots: int = 1) -> int:
         """Resident working set of one kernel instance, in bytes.
 
         The input stays in HBM; only the level-0 halo tile (``tile0 x tile0``,
-        DMA'd per grid cell) is VMEM-resident, plus all weights ("filters are
-        loaded into the kernel buffers only once", §3.3.1) and the per-level
-        tile buffers of the pyramid.
+        DMA'd per grid cell into one of ``x_slots`` landing slots) is
+        VMEM-resident, plus all weights ("filters are loaded into the kernel
+        buffers only once", §3.3.1) and the per-level tile buffers of the
+        pyramid.
         """
-        return 4 * (self._tile_floats() + self.weight_floats())
+        return 4 * (self._tile_floats(x_slots) + self.weight_floats())
 
-    def vmem_stream_bytes(self, slots: int = 1) -> int:
+    def vmem_stream_bytes(self, slots: int = 1, x_slots: int = 1) -> int:
         """Working set with per-level weight streaming: only ``slots`` copies
         of the largest single level's weights are VMEM-resident at once
         (DMA'd from HBM level by level; ``slots=2`` is the double-buffered
         pipeline that overlaps level ``l+1``'s fetch with level ``l``'s
         compute); biases stay resident.  The fallback when
         :meth:`vmem_bytes` busts the budget — e.g. ResNet-18's last block,
-        whose two 512x512 3x3 weight tensors alone exceed 16 MiB."""
-        floats = self._tile_floats()
+        whose two 512x512 3x3 weight tensors alone exceed 16 MiB.
+        ``x_slots`` counts input landing buffers as in :meth:`vmem_bytes`."""
+        floats = self._tile_floats(x_slots)
         floats += slots * max(self.level_weight_counts())
         floats += sum(p.n_out for p in self.levels)  # biases
         return 4 * floats
+
+    def input_dma_cycles(self) -> int:
+        """Cycles one grid cell's halo-tile DMA occupies the HBM interface
+        (``tile0^2 * C`` floats at :data:`HBM_BYTES_PER_CYCLE`) — the
+        quantity the cross-cell prefetch pipeline hides behind compute."""
+        c0 = self.levels[0].n_in
+        return -(-4 * self.tile0 ** 2 * c0 // HBM_BYTES_PER_CYCLE)
 
     def input_hbm_bytes(self, batch: int = 1, *, whole_image: bool = False) -> int:
         """Per-launch input read traffic.  The halo-tile dataflow fetches one
@@ -342,11 +352,20 @@ class LaunchPlan:
     weight pipeline (level ``l+1``'s DMA overlaps level ``l``'s compute), 1
     the blocking start();wait() fallback when two copies of the largest
     level's weights bust VMEM.
+
+    ``x_slots`` is the input landing-buffer count: 2 is the revolving
+    cross-cell prefetch pipeline (grid cell ``n`` starts cell ``n+1``'s
+    halo-tile DMA before running its own pyramid, so after the per-image
+    warm-up fill the input DMA hides behind the MXU cascade), 1 the serial
+    start();wait() path.  The chain is confined to one batch element — the
+    batch grid axis is declared ``parallel`` and may be partitioned across
+    TensorCores, so a prefetch must never cross a batch boundary.
     """
 
     program: TileProgram
     streamed: bool
     w_slots: int = 1
+    x_slots: int = 2
 
     @property
     def spec(self) -> FusionSpec:
@@ -358,11 +377,24 @@ class LaunchPlan:
 
     def vmem_bytes(self) -> int:
         if self.streamed:
-            return self.program.vmem_stream_bytes(self.w_slots)
-        return self.program.vmem_bytes()
+            return self.program.vmem_stream_bytes(self.w_slots, self.x_slots)
+        return self.program.vmem_bytes(self.x_slots)
 
     def hbm_bytes(self, batch: int = 1) -> int:
         return self.program.hbm_bytes(batch, streamed=self.streamed)
+
+    def with_input_pipeline(
+        self, vmem_budget: int = VMEM_BUDGET_BYTES
+    ) -> LaunchPlan:
+        """The ``x_slots=2`` variant of this plan when buildable — the
+        planner's ladder rule: the grid has a successor cell (``alpha > 1``)
+        and the extra landing slot fits the budget — else this plan
+        unchanged.  The single source of the buildability predicate for
+        consumers (benchmarks) comparing serial vs pipelined latency."""
+        cand = replace(self, x_slots=2)
+        if self.program.alpha > 1 and cand.vmem_bytes() <= vmem_budget:
+            return cand
+        return self
 
     def modeled_cycles(self, batch: int = 1) -> int:
         """Overlap-aware cycle cost over the launch's uniform-stride grid —
@@ -370,24 +402,37 @@ class LaunchPlan:
 
         Per movement: DS-1 compute cycles (Eq. 3), plus the streamed-weight
         DMA cost at :data:`HBM_BYTES_PER_CYCLE`.  With a double-buffered
-        pipeline (``w_slots=2``) only level 0's DMA (the pipeline ``fill``)
-        is exposed and the rest hides behind compute —
+        weight pipeline (``w_slots=2``) only level 0's DMA (the pipeline
+        ``fill``) is exposed and the rest hides behind compute —
         ``fill + max(compute, dma - fill)``, never worse than the
         single-slot fallback's serialized ``compute + dma``.  Resident
-        weights pay no per-movement DMA."""
-        from .cycle_model import ds1_cycles_per_movement
+        weights pay no per-movement DMA.
+
+        The input halo-tile DMA is then composed per batch element by
+        :func:`~repro.core.cycle_model.grid_pipeline_cycles`: serial
+        (``x_slots=1``) pays ``(input_dma + body) * cells``; the revolving
+        cross-cell prefetch (``x_slots=2``) pays
+        ``warmup_fill + body + (cells - 1) * max(body, input_dma)`` — never
+        worse than serial, equal at ``alpha == 1`` (no successor cell)."""
+        from .cycle_model import ds1_cycles_per_movement, grid_pipeline_cycles
 
         compute = ds1_cycles_per_movement(self.spec)
-        per_mv = compute
+        body = compute
         if self.streamed:
             cnts = self.program.level_weight_counts()
             dma = -(-4 * sum(cnts) // HBM_BYTES_PER_CYCLE)
             if self.w_slots > 1:
                 fill = -(-4 * cnts[0] // HBM_BYTES_PER_CYCLE)
-                per_mv = fill + max(compute, dma - fill)
+                body = fill + max(compute, dma - fill)
             else:
-                per_mv = compute + dma
-        return batch * self.program.alpha ** 2 * per_mv
+                body = compute + dma
+        per_image = grid_pipeline_cycles(
+            self.program.alpha ** 2,
+            body,
+            self.program.input_dma_cycles(),
+            pipelined=self.x_slots > 1,
+        )
+        return batch * per_image
 
 
 def plan_launch(
@@ -401,7 +446,10 @@ def plan_launch(
     output region whose program fits the VMEM budget, preferring
     fully-resident weights over per-level streaming (which re-reads weights
     once per grid cell), and double-buffered streaming (DMA overlapped with
-    compute) over the blocking single-slot fallback.
+    compute) over the blocking single-slot fallback.  Within each weight
+    regime the two-slot input landing buffer (cross-cell halo prefetch,
+    ``x_slots=2``) is preferred over the serial single slot; a 1x1 grid has
+    no successor cell to prefetch, so ``alpha == 1`` pins ``x_slots=1``.
     ``prefer_region="largest"`` (default) minimizes grid overhead;
     ``"smallest"`` is the paper's smallest-tile preference — maximal tile
     grids, i.e. END skipping at its finest granularity.
@@ -411,19 +459,29 @@ def plan_launch(
     regions = [r for r in range(out_size, 0, -1) if out_size % r == 0]
     if prefer_region == "smallest":
         regions.reverse()
+
+    def x_options(prog: TileProgram) -> tuple[int, ...]:
+        return (1,) if prog.alpha == 1 else (2, 1)
+
     for r in regions:
         prog = compile_program(spec, r)
-        if prog.vmem_bytes() <= vmem_budget:
-            return LaunchPlan(program=prog, streamed=False)
+        for xs in x_options(prog):
+            if prog.vmem_bytes(xs) <= vmem_budget:
+                return LaunchPlan(program=prog, streamed=False, x_slots=xs)
     if allow_stream:
         # region preference stays primary (a smaller region multiplies the
         # alpha^2 streamed weight re-reads); within a region prefer the
-        # double-buffered two-slot pipeline over the blocking single slot
+        # double-buffered two-slot weight pipeline over the blocking single
+        # slot, and within a weight regime the pipelined input buffer
         for r in regions:
             prog = compile_program(spec, r)
             for slots in (2, 1):
-                if prog.vmem_stream_bytes(slots) <= vmem_budget:
-                    return LaunchPlan(program=prog, streamed=True, w_slots=slots)
+                for xs in x_options(prog):
+                    if prog.vmem_stream_bytes(slots, xs) <= vmem_budget:
+                        return LaunchPlan(
+                            program=prog, streamed=True, w_slots=slots,
+                            x_slots=xs,
+                        )
     return None
 
 

@@ -19,6 +19,19 @@ Per grid cell (b, i, j):
     into a VMEM landing buffer with ``make_async_copy`` at offset
     ``(i*stride0, j*stride0)`` — per-cell input traffic is ``tile0^2 * C``
     (Algorithm 4's uniform minimal movement), not the whole padded image;
+  * with ``x_slots=2`` the landing buffer is a *revolving two-slot pipeline
+    across grid cells*: before running its own pyramid, cell ``n`` (row-major
+    within its batch element) starts the halo DMA for cell ``n+1`` — next
+    ``j``, wrapping to the next ``i`` — into the idle slot, so after the
+    per-image warm-up fill the input stream hides behind the Q-level MXU
+    cascade (§3.3's tile movement).  The chain deliberately resets at every
+    batch boundary: the batch grid axis is declared ``parallel`` in
+    ``dimension_semantics`` and may be partitioned across TensorCores, and a
+    prefetch crossing a batch boundary would land in another core's scratch.
+    END-skipped cells still issue their successor's prefetch (the input
+    prefetch precedes the cascade, outside every liveness branch), so a dead
+    region never stalls the pipeline.  ``x_slots=1`` is the serial
+    start();wait() path — bit-identical, only the movement schedule differs;
   * conv levels run as K*K unrolled strided-slice + MXU dot-general
     (``(P, Cin) @ (Cin, Cout)``) accumulations — the WPU array of Fig. 5 maps
     onto MXU tiles;
@@ -130,10 +143,12 @@ def _pyramid_kernel(
     progs: tuple[ConvLevelProg, ...],
     tile0: int,
     stride0: int,
+    alpha: int,
     relu: bool,
     end_skip: bool,
     stream: bool,
     w_slots: int,
+    x_slots: int,
     cnts: tuple[int, ...],
 ):
     q = len(progs)
@@ -166,18 +181,50 @@ def _pyramid_kernel(
             w_sem.at[l % w_slots],
         )
 
-    # ---- halo tile fetch: HBM -> VMEM landing buffer, overlapped with the
-    # level-0 weight DMA in the double-buffered streamed regime ----
-    x_dma = pltpu.make_async_copy(
-        x_hbm.at[bi, pl.ds(i * stride0, tile0), pl.ds(j * stride0, tile0), :],
-        x_scratch,
-        x_sem,
-    )
-    x_dma.start()
-    if stream and w_slots > 1:
-        w_dma(0).start()  # pipeline warm-up: level 0 always computes
-    x_dma.wait()
-    t = x_scratch[...]
+    def x_dma(ii, jj, slot):
+        """DMA descriptor for cell (bi, ii, jj)'s halo tile into one landing
+        slot.  All cells of the chain share ``bi``: the batch axis is
+        ``parallel`` (possibly core-partitioned), so the prefetch chain must
+        never cross a batch boundary."""
+        return pltpu.make_async_copy(
+            x_hbm.at[
+                bi, pl.ds(ii * stride0, tile0), pl.ds(jj * stride0, tile0), :
+            ],
+            x_scratch.at[slot],
+            x_sem.at[slot],
+        )
+
+    # ---- halo tile fetch: HBM -> VMEM landing buffer(s), overlapped with
+    # the level-0 weight DMA in the double-buffered streamed regime ----
+    if x_slots > 1:
+        # revolving cross-cell pipeline: cell n's tile was prefetched by cell
+        # n-1 into slot n % 2; this cell starts cell n+1's fetch into the
+        # idle slot (just vacated by cell n-1) before waiting on its own.
+        cell = i * alpha + j
+        slot = jax.lax.rem(cell, x_slots)
+
+        @pl.when(cell == 0)
+        def _():  # warm-up: each batch element's first cell self-fetches
+            x_dma(i, j, slot).start()
+
+        ni = jnp.where(j == alpha - 1, i + 1, i)
+        nj = jnp.where(j == alpha - 1, 0, j + 1)
+
+        @pl.when(cell + 1 < alpha * alpha)
+        def _():  # issued unconditionally w.r.t. the END cascade
+            x_dma(ni, nj, 1 - slot).start()
+
+        if stream and w_slots > 1:
+            w_dma(0).start()  # pipeline warm-up: level 0 always computes
+        x_dma(i, j, slot).wait()
+        t = x_scratch[slot]
+    else:
+        serial_dma = x_dma(i, j, 0)
+        serial_dma.start()
+        if stream and w_slots > 1:
+            w_dma(0).start()  # pipeline warm-up: level 0 always computes
+        serial_dma.wait()
+        t = x_scratch[0]
 
     skips = []
     # per level: None = statically live (always computed), else the traced
@@ -254,7 +301,7 @@ def _pyramid_kernel(
 
 def fused_pyramid_pallas(
     x_padded: jnp.ndarray,  # (B, Hp, Wp, C) pre-padded input
-    weights: list[jnp.ndarray],
+    weights: list[jnp.ndarray] | None,
     biases: list[jnp.ndarray],
     *,
     program: TileProgram,
@@ -263,21 +310,33 @@ def fused_pyramid_pallas(
     interpret: bool | None = None,
     stream_weights: bool = False,
     w_slots: int = 2,
+    x_slots: int = 2,
     weights_flat: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Launch the variadic fused pyramid over the (B, alpha, alpha) grid.
 
     The input stays in HBM; each grid cell DMAs its ``tile0 x tile0`` halo
-    tile into VMEM.  Weights/biases are flat per-conv-level lists,
-    index-aligned with ``program.levels``.  With ``stream_weights`` the
-    weights stay in HBM (memory space ANY) and each level's tensor is DMA'd
-    into one of ``w_slots`` shared VMEM scratch slots — double-buffered
-    (prefetch overlapping compute) when ``w_slots == 2`` — the fallback when
-    the fully-resident working set busts the VMEM budget (see
+    tile into VMEM.  With ``x_slots=2`` (default) the landing buffer
+    revolves across grid cells: each cell prefetches its successor's halo
+    tile into the idle slot before running its own pyramid, hiding the input
+    stream behind compute after the per-image warm-up; ``x_slots=1`` is the
+    serial fetch-then-compute path (bit-identical output).  The grid is
+    launched with ``dimension_semantics=("parallel", "arbitrary",
+    "arbitrary")`` so the compiler may partition the batch axis across
+    TensorCores — the prefetch chain never crosses a batch boundary, so the
+    partitioning is safe.
+
+    Weights/biases are flat per-conv-level lists, index-aligned with
+    ``program.levels``.  With ``stream_weights`` the weights stay in HBM
+    (memory space ANY) and each level's tensor is DMA'd into one of
+    ``w_slots`` shared VMEM scratch slots — double-buffered (prefetch
+    overlapping compute) when ``w_slots == 2`` — the fallback when the
+    fully-resident working set busts the VMEM budget (see
     ``TileProgram.vmem_stream_bytes``).  ``weights_flat`` supplies the
     pre-flattened concatenated weights (see
     :func:`repro.kernels.fused_conv.ops.flatten_weights`) so plan-driven
-    callers don't re-concatenate per step; ``interpret=None`` auto-resolves
+    callers don't re-concatenate per step; streamed callers holding only the
+    flat form may pass ``weights=None``.  ``interpret=None`` auto-resolves
     to compiled on TPU, interpreted elsewhere.
 
     Returns ``(out, skip)`` with ``skip`` shaped ``(B, alpha, alpha, Q)`` —
@@ -286,10 +345,15 @@ def fused_pyramid_pallas(
     """
     B = x_padded.shape[0]
     q = program.q_convs
+    assert x_slots in (1, 2), "x_slots: 1 (serial) or 2 (revolving pipeline)"
     assert len(biases) == q, "one bias per conv level"
-    if weights_flat is None:
+    if weights is None:
+        assert stream_weights and weights_flat is not None, (
+            "weights=None requires stream_weights=True and weights_flat"
+        )
+    elif weights_flat is None:
         assert len(weights) == q, "one weight tensor per conv level"
-    else:
+    if weights_flat is not None:
         assert weights_flat.size == sum(program.level_weight_counts()), (
             "weights_flat does not match the program's level weight counts"
         )
@@ -304,17 +368,19 @@ def fused_pyramid_pallas(
         progs=program.levels,
         tile0=program.tile0,
         stride0=program.stride0,
+        alpha=alpha,
         relu=relu,
         end_skip=end_skip,
         stream=stream_weights,
         w_slots=w_slots,
+        x_slots=x_slots,
         cnts=program.level_weight_counts(),
     )
     in_specs = [pl.BlockSpec(memory_space=pltpu.ANY)]
     operands: list[jnp.ndarray] = [x_padded]
     scratch_shapes: list = [
-        pltpu.VMEM((program.tile0, program.tile0, c0), jnp.float32),
-        pltpu.SemaphoreType.DMA,
+        pltpu.VMEM((x_slots, program.tile0, program.tile0, c0), jnp.float32),
+        pltpu.SemaphoreType.DMA((x_slots,)),
     ]
     if stream_weights:
         in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
@@ -352,6 +418,13 @@ def fused_pyramid_pallas(
             jax.ShapeDtypeStruct((B, alpha, alpha, q), jnp.int32),
         ],
         scratch_shapes=scratch_shapes,
+        # the batch axis is embarrassingly parallel: every cross-cell chain
+        # (input prefetch) is confined to one batch element, so the compiler
+        # may partition dim 0 across cores; the movement grid dims stay
+        # sequential (the revolving landing buffer is carried cell to cell)
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")
+        ),
         interpret=resolve_interpret(interpret),
     )(*operands)
     return out, skip

@@ -46,19 +46,20 @@ def flatten_weights(weights: list) -> jnp.ndarray:
 @partial(
     jax.jit,
     static_argnames=(
-        "spec", "out_region", "streamed", "w_slots", "relu", "end_skip",
-        "interpret", "vmem_budget",
+        "spec", "out_region", "streamed", "w_slots", "x_slots", "relu",
+        "end_skip", "interpret", "vmem_budget",
     ),
 )
 def fused_pyramid(
     x: jnp.ndarray,
-    weights: list,
+    weights: list | None,
     biases: list,
     *,
     spec: FusionSpec,
     out_region: int | None = None,
     streamed: bool | None = None,
     w_slots: int | None = None,
+    x_slots: int | None = None,
     relu: bool = True,
     end_skip: bool = True,
     interpret: bool | None = None,
@@ -70,13 +71,17 @@ def fused_pyramid(
     ``x``: (B, H, W, C) NHWC; ``weights[l]``: (K, K, Cin, Cout) and
     ``biases[l]``: (Cout,) per conv level, in chain order.  ``out_region``
     must tile the final output exactly; ``None`` picks the largest region
-    fitting the VMEM budget.  ``streamed`` / ``w_slots`` pin the weight
-    regime (the plan-driven entry used by :mod:`repro.net.runner`, whose
+    fitting the VMEM budget.  ``streamed`` / ``w_slots`` / ``x_slots`` pin
+    the weight regime and the input landing-buffer depth (the plan-driven
+    entry used by :mod:`repro.net.runner`, whose
     :class:`~repro.core.program.LaunchPlan` already decided them); ``None``
-    derives them from the budget (double-buffered streaming preferred over
-    the blocking single slot).  ``weights_flat`` optionally supplies the
-    pre-flattened streamed weights (:func:`flatten_weights`) to keep the
-    concatenation out of the per-call path.  ``interpret=None`` resolves to
+    derives them from the budget (double-buffered weight streaming preferred
+    over the blocking single slot; the revolving cross-cell input prefetch
+    preferred over the serial fetch whenever the grid has a successor cell
+    and the extra landing slot fits).  ``weights_flat`` optionally supplies
+    the pre-flattened streamed weights (:func:`flatten_weights`) to keep the
+    concatenation out of the per-call path — streamed callers holding only
+    the flat form may pass ``weights=None``.  ``interpret=None`` resolves to
     compiled on TPU, interpreted on CPU/GPU.  Returns ``(out, skip)`` with
     ``skip``: (B, alpha, alpha, Q) int32 END-cascade flags (level 0 never
     skips).
@@ -91,13 +96,40 @@ def fused_pyramid(
             streamed = lp.streamed
             if w_slots is None:
                 w_slots = lp.w_slots
+        if x_slots is None:
+            x_slots = lp.x_slots
     prog = compile_program(spec, out_region)
-    stream = prog.vmem_bytes() > vmem_budget if streamed is None else streamed
+    # a caller-pinned x_slots=2 charges the extra landing slot to every
+    # regime, including the resident-vs-streamed decision itself
+    xs_pinned = x_slots if x_slots is not None else 1
+    stream = (
+        prog.vmem_bytes(xs_pinned) > vmem_budget
+        if streamed is None
+        else streamed
+    )
     if stream and w_slots is None:
-        w_slots = 2 if prog.vmem_stream_bytes(2) <= vmem_budget else 1
+        # account for an already-pinned x_slots so the derived combo is
+        # jointly feasible (w_slots=1 + pipelined input may fit where
+        # w_slots=2 + pipelined busts)
+        w_slots = (
+            2 if prog.vmem_stream_bytes(2, xs_pinned) <= vmem_budget else 1
+        )
     if not stream:
         w_slots = 1  # unused by the resident kernel; pin for the jit key
-    vmem = prog.vmem_stream_bytes(w_slots) if stream else prog.vmem_bytes()
+    if x_slots is None:
+        if prog.alpha == 1:
+            x_slots = 1  # no successor cell: nothing to prefetch
+        elif stream:
+            x_slots = (
+                2 if prog.vmem_stream_bytes(w_slots, 2) <= vmem_budget else 1
+            )
+        else:
+            x_slots = 2 if prog.vmem_bytes(2) <= vmem_budget else 1
+    vmem = (
+        prog.vmem_stream_bytes(w_slots, x_slots)
+        if stream
+        else prog.vmem_bytes(x_slots)
+    )
     assert vmem <= vmem_budget, (
         f"working set {vmem} exceeds VMEM"
         + ("" if stream else "; retry with streamed weights or")
@@ -109,7 +141,8 @@ def fused_pyramid(
     )
     return fused_pyramid_pallas(
         xp,
-        [w.astype(jnp.float32) for w in weights],
+        None if weights is None
+        else [w.astype(jnp.float32) for w in weights],
         [b.astype(jnp.float32) for b in biases],
         program=prog,
         relu=relu,
@@ -117,6 +150,7 @@ def fused_pyramid(
         interpret=interpret,
         stream_weights=stream,
         w_slots=w_slots,
+        x_slots=x_slots,
         weights_flat=weights_flat,
     )
 

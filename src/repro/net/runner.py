@@ -154,19 +154,24 @@ def run_network(
                 continue  # interior pyramid node: computed with its launch
             conv_names = [m for m in pyr.node_names
                           if graph.node(m).op == "conv"]
+            flat = params.get(_FLAT + pyr.name)
             y, skip = fused_pyramid(
                 values[n.inputs[0]],
-                [params[m][0] for m in conv_names],
+                # streamed launches with pre-flattened weights don't need
+                # the per-level tensors threaded through the jit graph
+                None if flat is not None
+                else [params[m][0] for m in conv_names],
                 [params[m][1] for m in conv_names],
                 spec=pyr.spec,
                 out_region=pyr.launch.out_region,
                 streamed=pyr.launch.streamed,
                 w_slots=pyr.launch.w_slots if pyr.launch.streamed else None,
+                x_slots=pyr.launch.x_slots,
                 relu=pyr.relu,
                 end_skip=end_skip,
                 interpret=interpret,
                 vmem_budget=plan.vmem_budget,
-                weights_flat=params.get(_FLAT + pyr.name),
+                weights_flat=flat,
             )
             values[pyr.node_names[-1]] = y
             skips[pyr.name] = skip

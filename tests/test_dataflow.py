@@ -155,6 +155,7 @@ class TestHaloByteModel:
             assert tiny.w_slots == 2
 
 
+@pytest.mark.slow
 class TestHaloBorders:
     """Per-grid-cell halo DMA vs the monolithic reference at image borders:
     every (i, j) cell — including i=0 / i=alpha-1 edge tiles whose halos land
@@ -190,6 +191,7 @@ class TestHaloBorders:
         assert not np.allclose(np.asarray(y)[0], np.asarray(y)[1])
 
 
+@pytest.mark.slow
 class TestStreamedDoubleBufferParity:
     """The double-buffered weight pipeline must be bit-identical to resident
     weights — same MXU inputs, only the movement schedule differs."""

@@ -6,6 +6,7 @@ plan — padded stem pool, residual adds, projection shortcuts, streamed
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.net.graph import lenet5, resnet18, vgg16
 from repro.net.partition import auto_partition, layerwise_partition
@@ -33,6 +34,7 @@ def _run_and_check(graph, batch=2, atol=1e-4, plan=None, seed=1):
     return plan, skips
 
 
+@pytest.mark.slow
 class TestEndToEndParity:
     def test_lenet5_paper_scale(self):
         plan, skips = _run_and_check(lenet5())
