@@ -6,10 +6,18 @@ committed baseline ``benchmarks/baseline.json`` and fails when any gated
 metric *regresses* by more than ``--tolerance`` (default 10%):
 
 * ``kernel_dataflow.launches.<workload>``: ``hbm_bytes_total``,
-  ``modeled_cycles``, ``input_bytes_halo`` — per-launch off-chip traffic and
-  pipeline-aware modeled latency of each tracked kernel workload;
+  ``modeled_cycles``, ``input_bytes_halo``, ``slice_bytes`` — per-launch
+  off-chip traffic, pipeline-aware modeled latency, and the streamed
+  weight-DMA granule of each tracked kernel workload (``slice_bytes`` is 0
+  resident, the last level's whole tensor when untiled, and shrinks by
+  ``c_tiles`` on channel-tiled launches — a regression back to the untiled
+  blocking regime multiplies it and fails the gate);
 * ``partition.<model>.auto``: ``hbm_bytes``, ``modeled_latency_us`` — the
   auto-partitioner's whole-network plan quality for every zoo model.
+
+The launch rows also carry ungated context columns (``c_tiles``,
+``k_pipeline_cycles_saved``, ``pipeline_cycles_saved``) so the committed
+baseline documents the schedule each number was produced under.
 
 Lower is better for every gated metric, so improvements always pass; a
 genuine improvement should be locked in by refreshing the baseline with
@@ -31,7 +39,9 @@ import sys
 
 BASELINE = pathlib.Path(__file__).with_name("baseline.json")
 
-LAUNCH_METRICS = ("hbm_bytes_total", "modeled_cycles", "input_bytes_halo")
+LAUNCH_METRICS = (
+    "hbm_bytes_total", "modeled_cycles", "input_bytes_halo", "slice_bytes",
+)
 PARTITION_METRICS = ("hbm_bytes", "modeled_latency_us")
 
 

@@ -3,9 +3,10 @@ whole-network partition comparison, with machine-readable output.
 
 ``PYTHONPATH=src python -m benchmarks.run``  prints ``name,...`` CSV rows and
 writes ``BENCH_pyramid.json`` (``--out`` to relocate) holding the per-workload
-HBM bytes, wall-clock numbers, END skip fractions, and the auto-partition vs
-paper-fusion vs layer-by-layer comparison for every zoo model — the rows the
-perf trajectory tracks.
+HBM bytes, wall-clock numbers (median of :data:`WALLCLOCK_REPS` timed reps
+after one warm-up, rep count recorded alongside), END skip fractions, and the
+auto-partition vs paper-fusion vs layer-by-layer comparison for every zoo
+model — the rows the perf trajectory tracks.
 
 Sections:
 
@@ -23,9 +24,29 @@ from __future__ import annotations
 
 import argparse
 import json
+import statistics
 import time
 
 FREQ_MHZ = 100.0
+
+# every wall-clock number in the JSON is the median of this many timed reps
+# (after one untimed warm-up call); the rep count rides along in the output
+# so check_regression-style consumers compare like with like
+WALLCLOCK_REPS = 5
+
+
+def _timed_median_ms(fn, reps: int = WALLCLOCK_REPS) -> float:
+    """Median wall-clock milliseconds over ``reps`` timed calls of ``fn``
+    (which must block until its results are ready), after one untimed
+    warm-up call that absorbs jit compilation — single-shot numbers are
+    scheduler noise."""
+    fn()  # warm-up: jit cache + device transfer
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e3)
+    return statistics.median(times)
 
 
 def _partition_comparison(csv=print) -> dict:
@@ -59,6 +80,8 @@ def _partition_comparison(csv=print) -> dict:
                         "q_convs": p.q_convs,
                         "out_region": p.launch.out_region,
                         "streamed": p.launch.streamed,
+                        "regime": p.launch.regime,
+                        "c_tiles": p.launch.c_tiles,
                         "hbm_bytes": p.launch.hbm_bytes(),
                     }
                     for p in plan.pyramids
@@ -82,11 +105,12 @@ def _partition_comparison(csv=print) -> dict:
 def _kernel_dataflow(csv=print, dry_run: bool = True) -> dict:
     """Per-launch HBM dataflow of the fused-pyramid kernel: the retired
     whole-image-resident input model vs the halo-tile model (what the kernel
-    now actually moves), per regime, the serial vs software-pipelined
-    (cross-cell input prefetch) modeled latency delta, plus
-    compiled-vs-interpret wall clock when kernels may run.  The analytic rows
-    are emitted even under ``--dry-run`` so the CI smoke job can assert the
-    section exists and the bench trajectory has comparable numbers."""
+    now actually moves), per regime, the fully-blocking vs software-pipelined
+    modeled latency delta (cross-cell input prefetch *and* the k-axis weight
+    slice pipeline of channel-tiled launches), plus compiled-vs-interpret
+    wall clock when kernels may run.  The analytic rows are emitted even
+    under ``--dry-run`` so the CI smoke job can assert the section exists
+    and the bench trajectory has comparable numbers."""
     import dataclasses
 
     import jax
@@ -112,14 +136,20 @@ def _kernel_dataflow(csv=print, dry_run: bool = True) -> dict:
     for name, spec in specs.items():
         lp = plan_launch(spec)
         flow = launch_dataflow(lp.program, streamed=lp.streamed)
-        regime = (
-            f"streamed_x{lp.w_slots}" if lp.streamed else "resident"
-        )
-        cycles_serial = dataclasses.replace(lp, x_slots=1).modeled_cycles()
+        # the fully-blocking schedule: serial input fetch AND blocking
+        # weight DMA, at the launched c_tiles — what every DMA/MXU overlap
+        # (cross-cell x pipeline + k-axis slice pipeline) is measured against
+        cycles_serial = dataclasses.replace(
+            lp, x_slots=1, w_slots=1
+        ).modeled_cycles()
         # only advertise the pipelined latency when the x_slots=2 kernel is
         # actually buildable (the planner's own ladder rule) — otherwise the
         # row reports the launched regime
         cycles_pipe = lp.with_input_pipeline().modeled_cycles()
+        # the k-axis share alone: the launched plan vs its blocking-slice
+        # (w_slots=1) twin — 0 for resident launches, > 0 exactly when the
+        # weight pipeline (channel-tiled or whole-level) overlaps something
+        cycles_w1 = dataclasses.replace(lp, w_slots=1).modeled_cycles()
         row = {
             **flow,
             "alpha": lp.program.alpha,
@@ -128,6 +158,8 @@ def _kernel_dataflow(csv=print, dry_run: bool = True) -> dict:
             "streamed": lp.streamed,
             "w_slots": lp.w_slots,
             "x_slots": lp.x_slots,
+            "c_tiles": lp.c_tiles,
+            "slice_bytes": lp.slice_bytes(),
             "hbm_bytes_total": lp.hbm_bytes(),
             "input_reduction": (
                 flow["input_bytes_whole_image"] / flow["input_bytes_halo"]
@@ -136,13 +168,14 @@ def _kernel_dataflow(csv=print, dry_run: bool = True) -> dict:
             "modeled_cycles_serial": cycles_serial,
             "modeled_cycles_pipelined": cycles_pipe,
             "pipeline_cycles_saved": cycles_serial - cycles_pipe,
+            "k_pipeline_cycles_saved": cycles_w1 - lp.modeled_cycles(),
         }
         out["launches"][name] = row
         for model in ("whole_image", "halo"):
             csv(
                 f"kernel_dataflow,{name},{model},"
                 f"{flow[f'input_bytes_{model}']},{flow['weight_bytes']},"
-                f"{flow['output_bytes']},{regime}"
+                f"{flow['output_bytes']},{lp.regime}"
             )
         csv(
             f"kernel_dataflow_reduction,{name},input,"
@@ -151,7 +184,9 @@ def _kernel_dataflow(csv=print, dry_run: bool = True) -> dict:
         csv(
             f"kernel_dataflow_pipeline,{name},serial,{cycles_serial},"
             f"pipelined,{cycles_pipe},saved,{row['pipeline_cycles_saved']},"
-            f"x_slots,{lp.x_slots}"
+            f"x_slots,{lp.x_slots},c_tiles,{lp.c_tiles},"
+            f"slice_bytes,{row['slice_bytes']},"
+            f"k_saved,{row['k_pipeline_cycles_saved']}"
         )
 
     if not dry_run:
@@ -162,27 +197,25 @@ def _kernel_dataflow(csv=print, dry_run: bool = True) -> dict:
         spec = LENET5_FUSION
         params = init_pyramid_params(spec, jax.random.PRNGKey(0))
         x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32, 1))
-        wall: dict = {"backend": jax.default_backend()}
+        wall: dict = {
+            "backend": jax.default_backend(),
+            "reps": WALLCLOCK_REPS,
+        }
         modes = [("interpret", True)]
         if not resolve_interpret(None):  # compiled mode available (TPU)
             modes.append(("compiled", False))
         for label, interp in modes:
-            y, _ = fused_pyramid(
-                x, params.weights, params.biases, spec=spec, out_region=1,
-                interpret=interp,
-            )  # warm the jit cache
-            jax.block_until_ready(y)
-            t0 = time.perf_counter()
-            for _ in range(3):
+            def call(interp=interp):
                 y, _ = fused_pyramid(
                     x, params.weights, params.biases, spec=spec,
                     out_region=1, interpret=interp,
                 )
                 jax.block_until_ready(y)
-            wall[f"{label}_ms"] = (time.perf_counter() - t0) / 3 * 1e3
+
+            wall[f"{label}_ms"] = _timed_median_ms(call)
             csv(
                 f"kernel_dataflow_wallclock,lenet_q2,{label},"
-                f"{wall[f'{label}_ms']:.1f},ms_per_call"
+                f"{wall[f'{label}_ms']:.1f},ms_per_call_median{WALLCLOCK_REPS}"
             )
         if "compiled_ms" not in wall:
             wall["compiled_ms"] = None  # no TPU on this host
@@ -211,18 +244,19 @@ def _lenet_e2e(csv=print) -> dict:
         plan, init_network_params(graph, jax.random.PRNGKey(0))
     )
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 32, 1))
-    logits, skips = run_network(x, params, plan=plan)  # warm the jit cache
-    jax.block_until_ready(logits)
-    t0 = time.perf_counter()
-    for _ in range(3):
-        logits, skips = run_network(x, params, plan=plan)
+    _, skips = run_network(x, params, plan=plan)  # skip stats (+ jit warm)
+
+    def call():
+        logits, _ = run_network(x, params, plan=plan)
         jax.block_until_ready(logits)
-    dt_ms = (time.perf_counter() - t0) / 3 * 1e3
+
+    dt_ms = _timed_median_ms(call)
     frac = skip_fractions(skips)
     csv(f"lenet_e2e,auto_plan,interpret,{dt_ms:.1f},ms_per_batch4")
     return {
         "hbm_bytes": plan.hbm_bytes(),
         "wallclock_ms": dt_ms,
+        "wallclock_reps": WALLCLOCK_REPS,
         "batch": 4,
         "skip_fractions": frac,
     }
@@ -238,32 +272,32 @@ def _kernel_micro(csv=print) -> dict:
     from repro.kernels.fused_conv.ops import fused_conv2
     from repro.kernels.online_sop.ops import online_sop_end
 
-    out = {}
+    out = {"wallclock_reps": WALLCLOCK_REPS}
     params = init_pyramid_params(LENET5_FUSION, jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32, 1))
     args = (x, params.weights[0], params.biases[0], params.weights[1],
             params.biases[1])
-    res, _ = fused_conv2(*args, spec=LENET5_FUSION, out_region=1)
-    t0 = time.perf_counter()
-    for _ in range(3):
+
+    def call_conv():
         res, _ = fused_conv2(*args, spec=LENET5_FUSION, out_region=1)
         jax.block_until_ready(res)
-    dt = (time.perf_counter() - t0) / 3
-    csv(f"kernel_fused_conv_lenet,interpret,{dt * 1e6:.0f},us_per_call")
-    out["fused_conv_lenet_us"] = dt * 1e6
+
+    us = _timed_median_ms(call_conv) * 1e3
+    csv(f"kernel_fused_conv_lenet,interpret,{us:.0f},us_per_call")
+    out["fused_conv_lenet_us"] = us
 
     xs = jnp.asarray(np.random.default_rng(0).uniform(-0.03, 0.03, (512, 25)),
                      jnp.float32)
     y = jnp.asarray(np.random.default_rng(1).uniform(-0.5, 0.5, (25,)),
                     jnp.float32) / 4
-    s, _, _ = online_sop_end(xs, y, 16)
-    t0 = time.perf_counter()
-    for _ in range(3):
+
+    def call_sop():
         s, _, _ = online_sop_end(xs, y, 16)
         jax.block_until_ready(s)
-    dt = (time.perf_counter() - t0) / 3
-    csv(f"kernel_online_sop_512x25,interpret,{dt * 1e6:.0f},us_per_call")
-    out["online_sop_512x25_us"] = dt * 1e6
+
+    us = _timed_median_ms(call_sop) * 1e3
+    csv(f"kernel_online_sop_512x25,interpret,{us:.0f},us_per_call")
+    out["online_sop_512x25_us"] = us
     return out
 
 
@@ -305,23 +339,20 @@ def _vgg_q4_fusion_delta(csv=print) -> dict:
     params = init_pyramid_params(spec, jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32, 3))
     wall = {}
+    out["wallclock_reps"] = WALLCLOCK_REPS
     for label, kwargs in modes:
-        y, _ = fused_pyramid_chain(
-            x, params.weights, params.biases, spec=spec, **kwargs
-        )  # warm the jit caches
-        jax.block_until_ready(y)
-        t0 = time.perf_counter()
-        for _ in range(3):
+        def call(kwargs=kwargs):
             y, _ = fused_pyramid_chain(
                 x, params.weights, params.biases, spec=spec, **kwargs
             )
             jax.block_until_ready(y)
-        wall[label] = (time.perf_counter() - t0) / 3
-        out[f"wallclock_ms_{label}"] = wall[label] * 1e3
-        csv(f"vgg_q4_wallclock,{label},interpret,{wall[label] * 1e3:.1f},ms_per_call")
+
+        wall[label] = _timed_median_ms(call)
+        out[f"wallclock_ms_{label}"] = wall[label]
+        csv(f"vgg_q4_wallclock,{label},interpret,{wall[label]:.1f},ms_per_call")
     csv(
         f"vgg_q4_wallclock_delta,single_vs_chained2,"
-        f"{(wall['chained2'] - wall['single']) * 1e3:.1f},ms_saved_per_call"
+        f"{wall['chained2'] - wall['single']:.1f},ms_saved_per_call"
     )
     return out
 

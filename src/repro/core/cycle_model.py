@@ -116,6 +116,80 @@ def ds2_cycles_per_movement(spec: FusionSpec, p: ArithParams = DEFAULT_PARAMS,
     return total + p.n
 
 
+def ds1_split_cycles_per_movement(
+    spec: FusionSpec, p: ArithParams = DEFAULT_PARAMS
+) -> tuple[int, int]:
+    """Eq. (3) per-movement cycles split at the last conv group:
+    ``(mid, last)`` with ``mid`` the levels before the final conv (+ its
+    trailing pool) and ``last`` the final conv group plus the single
+    trailing ``n`` (working precision is paid once, at the pyramid's end, so
+    it belongs to the last level's share).  ``mid + last`` equals
+    :func:`ds1_cycles_per_movement`; ``mid == 0`` for Q=1 chains.
+
+    This is the compute split the channel-tiled cost model needs: the mid
+    share runs once per grid cell (``k == 0``), the last share is divided
+    across the ``c_tiles`` output-channel steps."""
+    groups = _levels_with_pools(spec)
+    terms = []
+    for conv, pool in groups:
+        if conv is None:
+            terms.append(p.mp_cycles)
+            continue
+        lk = _log2c(conv.K * conv.K)
+        ln = _log2c(conv.n_in)
+        t = p.delta_olm + p.delta_ola * lk + p.delta_ola * ln + lk + ln
+        if pool is not None:
+            t += p.mp_cycles
+        terms.append(t)
+    last_conv = max(
+        (gi for gi, (conv, _) in enumerate(groups) if conv is not None),
+        default=0,
+    )
+    mid = sum(terms[:last_conv])
+    last = sum(terms[last_conv:]) + p.n
+    return mid, last
+
+
+def channel_tiled_body_cycles(
+    compute_mid: int,
+    compute_last: int,
+    dma_mid: int,
+    dma_slice: int,
+    c_tiles: int,
+    *,
+    pipelined: bool,
+) -> int:
+    """Per-grid-cell cycles of the channel-tiled schedule (``c_tiles`` > 1).
+
+    ``compute_mid`` / ``dma_mid`` are the once-per-cell (``k == 0``) mid
+    pyramid's compute and blocking weight-DMA cycles; ``compute_last`` is
+    the whole last level's compute, split evenly over the ``c_tiles`` steps;
+    ``dma_slice`` is one ``(Cin, Cout / c_tiles)`` weight slice's DMA.
+
+    Blocking (``w_slots=1``): every slice fetch is exposed —
+    ``dma_mid + compute_mid + c_tiles * (dma_slice + ck)``.
+
+    Pipelined (``w_slots=2``): slice 0's fetch starts at the top of the
+    kernel body and fills behind the mid pyramid
+    (``max(compute_mid, dma_slice)`` exposed), each later slice's fetch
+    hides behind the previous slice's MXU pass (steady state
+    ``max(ck, dma_slice)``), and the final slice's compute drains exposed:
+    ``dma_mid + max(compute_mid, dma_slice) + ck
+    + (c_tiles - 1) * max(ck, dma_slice)``.  The saving over blocking is
+    ``min(compute_mid, dma_slice) + (c_tiles - 1) * min(ck, dma_slice)``
+    >= 0 — never worse.
+    """
+    ck = -(-compute_last // c_tiles)
+    if not pipelined:
+        return dma_mid + compute_mid + c_tiles * (dma_slice + ck)
+    return (
+        dma_mid
+        + max(compute_mid, dma_slice)
+        + ck
+        + (c_tiles - 1) * max(ck, dma_slice)
+    )
+
+
 def grid_pipeline_cycles(
     cells: int, body: int, input_dma: int, *, pipelined: bool
 ) -> int:

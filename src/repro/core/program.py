@@ -182,31 +182,61 @@ class TileProgram:
         — the slice table for streamed-weight launches."""
         return tuple(p.K * p.K * p.n_in * p.n_out for p in self.levels)
 
-    def _tile_floats(self, x_slots: int = 1) -> int:
+    def c_tile_options(self) -> tuple[int, ...]:
+        """Legal output-channel tile counts of the last level, ascending and
+        excluding the untiled 1: the divisors of the final conv's ``n_out``
+        (a ``Cout`` block must tile the channel axis exactly so the per-``k``
+        out BlockSpec stays uniform) that keep at least **two** channels per
+        slice.  Single-channel slices are excluded on principle (they waste
+        the 128-lane MXU) and on contract: XLA lowers the degenerate
+        ``(P, Cin) @ (Cin, 1)`` dot through its matrix-vector special case,
+        whose contraction order differs from the sliced-out column of the
+        full dot — breaking the bitwise-parity guarantee every other slice
+        width keeps."""
+        m = self.levels[-1].n_out
+        return tuple(c for c in range(2, m // 2 + 1) if m % c == 0)
+
+    def _tile_floats(self, x_slots: int = 1, c_tiles: int = 1) -> int:
         """Per-grid-cell pyramid tile buffers: ``x_slots`` level-0 halo-tile
         landing buffers (DMA destinations; 2 = the revolving cross-cell
         prefetch pipeline), the live level-0 tile value, and every level's
-        conv/pool output tile."""
+        conv/pool output tile.  With ``c_tiles > 1`` the last level's
+        conv/pool tiles hold one ``Cout / c_tiles`` channel block at a time
+        (the per-``k`` working tile of the channel-tiled grid), and a Q > 1
+        chain additionally carries the *persistent* mid-pyramid scratch the
+        kernel re-reads at ``k > 0`` — live alongside the transient mid
+        tiles at ``k == 0``, so it is counted on top of them."""
         c0 = self.levels[0].n_in
         floats = (1 + x_slots) * self.tile0 ** 2 * c0
-        for p in self.levels:
-            floats += p.out_size ** 2 * p.n_out
+        for li, p in enumerate(self.levels):
+            n_out = p.n_out
+            if li == len(self.levels) - 1:
+                n_out = -(-n_out // c_tiles)
+            floats += p.out_size ** 2 * n_out
             if p.pool is not None:
-                floats += p.pool_out ** 2 * p.n_out
+                floats += p.pool_out ** 2 * n_out
+        if c_tiles > 1 and len(self.levels) > 1:
+            last = self.levels[-1]
+            floats += last.in_size ** 2 * last.n_in  # mid_scratch carry
         return floats
 
-    def vmem_bytes(self, x_slots: int = 1) -> int:
+    def vmem_bytes(self, x_slots: int = 1, c_tiles: int = 1) -> int:
         """Resident working set of one kernel instance, in bytes.
 
         The input stays in HBM; only the level-0 halo tile (``tile0 x tile0``,
         DMA'd per grid cell into one of ``x_slots`` landing slots) is
         VMEM-resident, plus all weights ("filters are loaded into the kernel
         buffers only once", §3.3.1) and the per-level tile buffers of the
-        pyramid.
+        pyramid.  ``c_tiles`` only shrinks the last level's working tile —
+        resident weights stay whole, so channel tiling is a streamed-regime
+        tool (the planner never picks it resident); the resident kernel still
+        accepts it for parity testing.
         """
-        return 4 * (self._tile_floats(x_slots) + self.weight_floats())
+        return 4 * (self._tile_floats(x_slots, c_tiles) + self.weight_floats())
 
-    def vmem_stream_bytes(self, slots: int = 1, x_slots: int = 1) -> int:
+    def vmem_stream_bytes(
+        self, slots: int = 1, x_slots: int = 1, c_tiles: int = 1
+    ) -> int:
         """Working set with per-level weight streaming: only ``slots`` copies
         of the largest single level's weights are VMEM-resident at once
         (DMA'd from HBM level by level; ``slots=2`` is the double-buffered
@@ -214,11 +244,64 @@ class TileProgram:
         compute); biases stay resident.  The fallback when
         :meth:`vmem_bytes` busts the budget — e.g. ResNet-18's last block,
         whose two 512x512 3x3 weight tensors alone exceed 16 MiB.
-        ``x_slots`` counts input landing buffers as in :meth:`vmem_bytes`."""
-        floats = self._tile_floats(x_slots)
-        floats += slots * max(self.level_weight_counts())
+        ``x_slots`` counts input landing buffers as in :meth:`vmem_bytes`.
+
+        With ``c_tiles > 1`` (the channel-tiled grid) the last level streams
+        per-``k`` ``(Cin, Cout / c_tiles)`` slices through ``slots`` scratch
+        slots while the mid levels fall back to one blocking slot sized for
+        the largest mid level — streamed slices shrink by ``c_tiles``, which
+        is what lets ResNet-18 b7 afford the double-buffered ``slots=2``
+        regime its untiled weights bust."""
+        cnts = self.level_weight_counts()
+        floats = self._tile_floats(x_slots, c_tiles)
+        if c_tiles > 1:
+            if len(cnts) > 1:
+                floats += max(cnts[:-1])  # one blocking mid-level slot
+            floats += slots * -(-cnts[-1] // c_tiles)  # per-k slice slots
+        else:
+            floats += slots * max(cnts)
         floats += sum(p.n_out for p in self.levels)  # biases
         return 4 * floats
+
+    def resolve_stream_regime(
+        self,
+        vmem_budget: int,
+        x_slots: int = 1,
+        w_slots: int | None = None,
+        c_tiles: int | None = None,
+    ) -> tuple[int, int]:
+        """Resolve ``(w_slots, c_tiles)`` for a streamed launch along
+        :func:`plan_launch`'s rung order — double-buffered untiled >
+        channel-tiled double-buffered (smallest feasible ``c_tiles``) >
+        blocking single slot — honouring whichever knobs the caller already
+        pinned.  The kernel-entry fallback used by
+        :func:`repro.kernels.fused_conv.ops.fused_pyramid`, so the single
+        rung order lives here and in :func:`plan_launch` only.  Never
+        raises: a jointly-infeasible pin surfaces at the caller's VMEM
+        assert."""
+        if w_slots is None and c_tiles is None:
+            if self.vmem_stream_bytes(2, x_slots) <= vmem_budget:
+                return 2, 1
+            for ct in self.c_tile_options():
+                if self.vmem_stream_bytes(2, x_slots, ct) <= vmem_budget:
+                    return 2, ct
+            return 1, 1
+        if w_slots is None:
+            fits2 = self.vmem_stream_bytes(2, x_slots, c_tiles) <= vmem_budget
+            return (2 if fits2 else 1), c_tiles
+        if c_tiles is None:
+            if (
+                w_slots > 1
+                and self.vmem_stream_bytes(w_slots, x_slots) > vmem_budget
+            ):
+                for ct in self.c_tile_options():
+                    if (
+                        self.vmem_stream_bytes(w_slots, x_slots, ct)
+                        <= vmem_budget
+                    ):
+                        return w_slots, ct
+            return w_slots, 1
+        return w_slots, c_tiles
 
     def input_dma_cycles(self) -> int:
         """Cycles one grid cell's halo-tile DMA occupies the HBM interface
@@ -238,11 +321,21 @@ class TileProgram:
         tile = self.padded_input ** 2 if whole_image else self.tile0 ** 2
         return 4 * batch * self.alpha ** 2 * tile * c0
 
-    def hbm_bytes(self, batch: int = 1, *, streamed: bool = False) -> int:
+    def hbm_bytes(
+        self, batch: int = 1, *, streamed: bool = False, c_tiles: int = 1
+    ) -> int:
         """Off-chip traffic of one launch: read halo tiles + weights, write
         output map + skip flags.  Chained launches pay this per chunk — the
         intermediate maps crossing HBM are exactly what fusion removes.
-        Streamed-weight launches re-read the weights once per grid cell."""
+        Streamed-weight launches re-read the weights once per grid cell.
+
+        ``c_tiles`` is accepted for symmetry with the VMEM models but leaves
+        the total unchanged: the channel-tiled grid reads ``1 / c_tiles`` of
+        the last level's weights per ``k`` step across ``c_tiles`` steps
+        (same per-cell total), writes each output channel block exactly once,
+        and emits one flag vector per cell — channel tiling re-schedules the
+        movement, it does not add traffic."""
+        del c_tiles  # traffic-invariant; see docstring
         w_reads = batch * self.alpha ** 2 if streamed else 1
         write = (
             batch * self.out_size ** 2 * self.n_out
@@ -360,12 +453,23 @@ class LaunchPlan:
     start();wait() path.  The chain is confined to one batch element — the
     batch grid axis is declared ``parallel`` and may be partitioned across
     TensorCores, so a prefetch must never cross a batch boundary.
+
+    ``c_tiles > 1`` is the channel-tiled grid: a fourth sequential grid axis
+    ``k`` over ``Cout / c_tiles`` output-channel tiles of the *last* level
+    (the column-parallel axis of the paper's Fig. 5 WPU array).  Levels
+    ``0..Q-2`` are computed once per cell at ``k == 0`` into a persistent
+    VMEM scratch and reused for ``k > 0``; level ``Q-1`` runs per ``k`` on a
+    ``(Cin, Cout / c_tiles)`` streamed weight slice, so with ``w_slots=2``
+    the next slice's DMA overlaps the current slice's MXU pass — the regime
+    that restores pipelining to ``alpha == 1`` launches the cross-cell input
+    prefetch cannot touch (no successor cell).
     """
 
     program: TileProgram
     streamed: bool
     w_slots: int = 1
     x_slots: int = 2
+    c_tiles: int = 1
 
     @property
     def spec(self) -> FusionSpec:
@@ -375,13 +479,37 @@ class LaunchPlan:
     def out_region(self) -> int:
         return self.program.out_region
 
+    @property
+    def regime(self) -> str:
+        """Display label: ``resident``, ``streamed_w<slots>``, with a
+        ``_c<tiles>`` suffix on channel-tiled launches."""
+        if not self.streamed:
+            return "resident"
+        label = f"streamed_w{self.w_slots}"
+        if self.c_tiles > 1:
+            label += f"_c{self.c_tiles}"
+        return label
+
     def vmem_bytes(self) -> int:
         if self.streamed:
-            return self.program.vmem_stream_bytes(self.w_slots, self.x_slots)
-        return self.program.vmem_bytes(self.x_slots)
+            return self.program.vmem_stream_bytes(
+                self.w_slots, self.x_slots, self.c_tiles
+            )
+        return self.program.vmem_bytes(self.x_slots, self.c_tiles)
 
     def hbm_bytes(self, batch: int = 1) -> int:
-        return self.program.hbm_bytes(batch, streamed=self.streamed)
+        return self.program.hbm_bytes(
+            batch, streamed=self.streamed, c_tiles=self.c_tiles
+        )
+
+    def slice_bytes(self) -> int:
+        """Bytes of one per-``k`` streamed weight slice of the last level —
+        the DMA granule the channel-tiled pipeline hides behind the MXU
+        (0 for resident launches, the whole last level at ``c_tiles == 1``)."""
+        if not self.streamed:
+            return 0
+        cnt = self.program.level_weight_counts()[-1]
+        return 4 * -(-cnt // self.c_tiles)
 
     def with_input_pipeline(
         self, vmem_budget: int = VMEM_BUDGET_BYTES
@@ -408,24 +536,53 @@ class LaunchPlan:
         single-slot fallback's serialized ``compute + dma``.  Resident
         weights pay no per-movement DMA.
 
+        With the channel-tiled grid (``c_tiles > 1``, streamed) the body is
+        :func:`~repro.core.cycle_model.channel_tiled_body_cycles`: blocking
+        mid-level weight DMA + mid compute, then the k-axis pipeline — slice
+        0's fetch overlaps the mid pyramid (fill), each later slice's fetch
+        overlaps the previous slice's MXU pass (steady), the last slice's
+        compute drains exposed.
+
         The input halo-tile DMA is then composed per batch element by
         :func:`~repro.core.cycle_model.grid_pipeline_cycles`: serial
         (``x_slots=1``) pays ``(input_dma + body) * cells``; the revolving
         cross-cell prefetch (``x_slots=2``) pays
         ``warmup_fill + body + (cells - 1) * max(body, input_dma)`` — never
         worse than serial, equal at ``alpha == 1`` (no successor cell)."""
-        from .cycle_model import ds1_cycles_per_movement, grid_pipeline_cycles
+        from .cycle_model import (
+            channel_tiled_body_cycles,
+            ds1_cycles_per_movement,
+            ds1_split_cycles_per_movement,
+            grid_pipeline_cycles,
+        )
 
         compute = ds1_cycles_per_movement(self.spec)
         body = compute
         if self.streamed:
             cnts = self.program.level_weight_counts()
-            dma = -(-4 * sum(cnts) // HBM_BYTES_PER_CYCLE)
-            if self.w_slots > 1:
-                fill = -(-4 * cnts[0] // HBM_BYTES_PER_CYCLE)
-                body = fill + max(compute, dma - fill)
+            if self.c_tiles > 1:
+                compute_mid, compute_last = ds1_split_cycles_per_movement(
+                    self.spec
+                )
+                dma_mid = -(-4 * sum(cnts[:-1]) // HBM_BYTES_PER_CYCLE)
+                dma_slice = -(
+                    -4 * -(-cnts[-1] // self.c_tiles) // HBM_BYTES_PER_CYCLE
+                )
+                body = channel_tiled_body_cycles(
+                    compute_mid,
+                    compute_last,
+                    dma_mid,
+                    dma_slice,
+                    self.c_tiles,
+                    pipelined=self.w_slots > 1,
+                )
             else:
-                body = compute + dma
+                dma = -(-4 * sum(cnts) // HBM_BYTES_PER_CYCLE)
+                if self.w_slots > 1:
+                    fill = -(-4 * cnts[0] // HBM_BYTES_PER_CYCLE)
+                    body = fill + max(compute, dma - fill)
+                else:
+                    body = compute + dma
         per_image = grid_pipeline_cycles(
             self.program.alpha ** 2,
             body,
@@ -446,13 +603,19 @@ def plan_launch(
     output region whose program fits the VMEM budget, preferring
     fully-resident weights over per-level streaming (which re-reads weights
     once per grid cell), and double-buffered streaming (DMA overlapped with
-    compute) over the blocking single-slot fallback.  Within each weight
-    regime the two-slot input landing buffer (cross-cell halo prefetch,
-    ``x_slots=2``) is preferred over the serial single slot; a 1x1 grid has
-    no successor cell to prefetch, so ``alpha == 1`` pins ``x_slots=1``.
-    ``prefer_region="largest"`` (default) minimizes grid overhead;
-    ``"smallest"`` is the paper's smallest-tile preference — maximal tile
-    grids, i.e. END skipping at its finest granularity.
+    compute) over the blocking single-slot fallback.  Between those two
+    streamed rungs sits the **channel-tiled** regime: when two whole copies
+    of the largest level's weights bust VMEM, tiling the last level's Cout
+    across a fourth sequential grid axis shrinks the streamed slice by
+    ``c_tiles`` so the double-buffered pipeline fits after all — the ladder
+    is resident > streamed x2 > channel-tiled streamed x2 > streamed x1,
+    with the smallest (coarsest-slice) feasible ``c_tiles`` preferred.
+    Within each weight regime the two-slot input landing buffer (cross-cell
+    halo prefetch, ``x_slots=2``) is preferred over the serial single slot;
+    a 1x1 grid has no successor cell to prefetch, so ``alpha == 1`` pins
+    ``x_slots=1``.  ``prefer_region="largest"`` (default) minimizes grid
+    overhead; ``"smallest"`` is the paper's smallest-tile preference —
+    maximal tile grids, i.e. END skipping at its finest granularity.
     Returns ``None`` when no single launch fits."""
     assert prefer_region in ("largest", "smallest")
     out_size = spec.feature_sizes()[-1]
@@ -471,17 +634,28 @@ def plan_launch(
     if allow_stream:
         # region preference stays primary (a smaller region multiplies the
         # alpha^2 streamed weight re-reads); within a region prefer the
-        # double-buffered two-slot weight pipeline over the blocking single
-        # slot, and within a weight regime the pipelined input buffer
+        # double-buffered two-slot weight pipeline over channel-tiled
+        # double buffering over the blocking single slot, and within a
+        # weight regime the pipelined input buffer
         for r in regions:
             prog = compile_program(spec, r)
-            for slots in (2, 1):
+            for xs in x_options(prog):
+                if prog.vmem_stream_bytes(2, xs) <= vmem_budget:
+                    return LaunchPlan(
+                        program=prog, streamed=True, w_slots=2, x_slots=xs,
+                    )
+            for ct in prog.c_tile_options():
                 for xs in x_options(prog):
-                    if prog.vmem_stream_bytes(slots, xs) <= vmem_budget:
+                    if prog.vmem_stream_bytes(2, xs, ct) <= vmem_budget:
                         return LaunchPlan(
-                            program=prog, streamed=True, w_slots=slots,
-                            x_slots=xs,
+                            program=prog, streamed=True, w_slots=2,
+                            x_slots=xs, c_tiles=ct,
                         )
+            for xs in x_options(prog):
+                if prog.vmem_stream_bytes(1, xs) <= vmem_budget:
+                    return LaunchPlan(
+                        program=prog, streamed=True, w_slots=1, x_slots=xs,
+                    )
     return None
 
 

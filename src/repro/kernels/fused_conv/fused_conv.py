@@ -299,6 +299,212 @@ def _pyramid_kernel(
     skip_ref[0, 0, 0, :] = jnp.stack(skips)
 
 
+def _ktiled_kernel(
+    *refs,
+    progs: tuple[ConvLevelProg, ...],
+    tile0: int,
+    stride0: int,
+    alpha: int,
+    relu: bool,
+    end_skip: bool,
+    stream: bool,
+    w_slots: int,
+    x_slots: int,
+    c_tiles: int,
+    cnts: tuple[int, ...],
+):
+    """Channel-tiled variant over the (B, alpha, alpha, c_tiles) grid.
+
+    The fourth grid axis ``k`` walks ``Cout / c_tiles`` output-channel tiles
+    of the *last* level (the column-parallel axis of the paper's Fig. 5 WPU
+    array).  Levels ``0..Q-2`` run once per cell, at ``k == 0``, into a
+    persistent VMEM scratch (Pallas TPU scratch survives sequential grid
+    iterations — the same property the revolving landing buffer relies on);
+    ``k > 0`` re-reads the scratch and computes only the last level's k-th
+    channel block, written through a channel-indexed out BlockSpec.
+
+    Streamed weights split in two: mid levels fetch their whole tensor from
+    the flat HBM array through one *blocking* scratch slot inside their live
+    branch (the double-buffer budget belongs to the slices), while the last
+    level DMAs per-``k`` ``(K, K, Cin, Cout/c_tiles)`` slices from its
+    natural 4D HBM ref through ``w_slots`` revolving slots — slice 0 starts
+    at the top of the ``k == 0`` body so it fills behind the mid pyramid,
+    slice ``k+1`` starts before slice ``k``'s MXU pass.  Slice DMAs are
+    issued and drained *unconditionally* with respect to the END cascade
+    (only the MXU pass is gated), so the semaphores stay balanced with no
+    speculative drain paths; the END flag vector is written once, at
+    ``k == 0`` (the last level's liveness predicate is k-invariant: every k
+    reads the same mid tile)."""
+    q = len(progs)
+    last = progs[-1]
+    ct_out = last.n_out // c_tiles
+    if stream:
+        x_hbm, wflat_ref, wlast_ref = refs[0], refs[1], refs[2]
+        b_refs = refs[3 : 3 + q]
+        out_ref, skip_ref = refs[3 + q], refs[4 + q]
+        scratch = list(refs[5 + q :])
+    else:
+        x_hbm = refs[0]
+        w_refs = refs[1 : 1 + 2 * q : 2]
+        b_refs = refs[2 : 2 + 2 * q : 2]
+        out_ref, skip_ref = refs[1 + 2 * q], refs[2 + 2 * q]
+        scratch = list(refs[3 + 2 * q :])
+    x_scratch, x_sem = scratch.pop(0), scratch.pop(0)
+    mid_scratch = scratch.pop(0) if q > 1 else None
+    if stream:
+        if q > 1:
+            wm_scratch, wm_sem = scratch.pop(0), scratch.pop(0)
+        wk_scratch, wk_sem = scratch.pop(0), scratch.pop(0)
+
+    bi = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    k = pl.program_id(3)
+    idx = (i, j)
+
+    def x_dma(ii, jj, slot):
+        return pltpu.make_async_copy(
+            x_hbm.at[
+                bi, pl.ds(ii * stride0, tile0), pl.ds(jj * stride0, tile0), :
+            ],
+            x_scratch.at[slot],
+            x_sem.at[slot],
+        )
+
+    if stream:
+        offs = [sum(cnts[:l]) for l in range(q)]
+
+        def wm_dma(l):
+            """Blocking mid-level fetch: level l's whole slice of the flat
+            HBM weight array into the single mid scratch slot."""
+            return pltpu.make_async_copy(
+                wflat_ref.at[pl.ds(offs[l], cnts[l])],
+                wm_scratch.at[0, pl.ds(0, cnts[l])],
+                wm_sem,
+            )
+
+        def wk_dma(kk):
+            """Per-k slice fetch: the last level's kk-th Cout block, a
+            strided read of the natural 4D HBM ref."""
+            return pltpu.make_async_copy(
+                wlast_ref.at[:, :, :, pl.ds(kk * ct_out, ct_out)],
+                wk_scratch.at[kk % w_slots],
+                wk_sem.at[kk % w_slots],
+            )
+
+    if x_slots > 1:
+        cell = i * alpha + j
+        slot = jax.lax.rem(cell, x_slots)
+    else:
+        slot = 0
+
+    # ---- k == 0: input halo fetch (+ cross-cell prefetch chain) and the
+    # mid pyramid, persisted into mid_scratch for k > 0 ----
+    @pl.when(k == 0)
+    def _():
+        if x_slots > 1:
+            @pl.when(cell == 0)
+            def _():  # warm-up: each batch element's first cell self-fetches
+                x_dma(i, j, slot).start()
+
+            ni = jnp.where(j == alpha - 1, i + 1, i)
+            nj = jnp.where(j == alpha - 1, 0, j + 1)
+
+            @pl.when(cell + 1 < alpha * alpha)
+            def _():  # successor prefetch, unconditional w.r.t. END
+                x_dma(ni, nj, 1 - slot).start()
+
+            if stream and w_slots > 1:
+                wk_dma(0).start()  # slice 0 fills behind the mid pyramid
+            x_dma(i, j, slot).wait()
+        else:
+            serial_dma = x_dma(i, j, 0)
+            serial_dma.start()
+            if stream and w_slots > 1:
+                wk_dma(0).start()  # slice 0 fills behind the mid pyramid
+            serial_dma.wait()
+        t = x_scratch[slot]
+
+        skips = []
+        for l, prog in enumerate(progs[:-1]):
+            b = b_refs[l][...]
+
+            def run_level(t_in, l=l, prog=prog, b=b):
+                if stream:
+                    wm_dma(l).start()
+                    wm_dma(l).wait()
+                    w = wm_scratch[0, 0 : cnts[l]].reshape(
+                        prog.K, prog.K, prog.n_in, prog.n_out
+                    )
+                else:
+                    w = w_refs[l][...]
+                tl = _conv_tile(t_in, w, b, prog.K, prog.S, prog.out_size)
+                if relu:
+                    tl = jnp.maximum(tl, 0.0)
+                return _level_epilogue(tl, idx, prog)
+
+            if l == 0 or not (end_skip and relu):
+                skips.append(jnp.int32(0))
+                t = run_level(t)
+            else:
+                live = jnp.max(t) > 0.0
+                skips.append(jnp.where(live, 0, 1).astype(jnp.int32))
+                t = jax.lax.cond(
+                    live,
+                    run_level,
+                    lambda t_in, b=b, prog=prog: _const_level(
+                        idx, prog, b, relu
+                    ),
+                    t,
+                )
+        if q > 1:
+            mid_scratch[...] = t
+            skip_ref[0, 0, 0, 0 : q - 1] = jnp.stack(skips)
+
+    # ---- every k: the last level's k-th output-channel block ----
+    t_in = mid_scratch[...] if q > 1 else x_scratch[slot]
+    b_full = b_refs[q - 1][...]
+    bk = jax.lax.dynamic_slice_in_dim(b_full, k * ct_out, ct_out, 0)
+
+    if stream:
+        if w_slots > 1:
+            @pl.when(k + 1 < c_tiles)
+            def _():  # revolving flip: next slice behind this MXU pass
+                wk_dma(k + 1).start()
+        else:
+            wk_dma(k).start()  # blocking single-slot fallback
+        wk_dma(k).wait()  # unconditional: doubles as the END drain
+        w_k = wk_scratch[k % w_slots]
+    else:
+        w_k = jax.lax.dynamic_slice_in_dim(w_refs[q - 1][...], k * ct_out,
+                                           ct_out, 3)
+
+    def run_last(t_mid):
+        tl = _conv_tile(t_mid, w_k, bk, last.K, last.S, last.out_size)
+        if relu:
+            tl = jnp.maximum(tl, 0.0)
+        return _level_epilogue(tl, idx, last)
+
+    if q == 1 or not (end_skip and relu):
+        last_flag = jnp.int32(0)
+        res = run_last(t_in)
+    else:
+        live = jnp.max(t_in) > 0.0  # k-invariant: same mid tile every k
+        last_flag = jnp.where(live, 0, 1).astype(jnp.int32)
+        res = jax.lax.cond(
+            live,
+            run_last,
+            lambda t_mid: _const_level(idx, last, bk, relu),
+            t_in,
+        )
+
+    out_ref[0, :, :, :] = res
+
+    @pl.when(k == 0)
+    def _():
+        skip_ref[0, 0, 0, q - 1 :] = last_flag.reshape(1)
+
+
 def fused_pyramid_pallas(
     x_padded: jnp.ndarray,  # (B, Hp, Wp, C) pre-padded input
     weights: list[jnp.ndarray] | None,
@@ -311,6 +517,7 @@ def fused_pyramid_pallas(
     stream_weights: bool = False,
     w_slots: int = 2,
     x_slots: int = 2,
+    c_tiles: int = 1,
     weights_flat: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Launch the variadic fused pyramid over the (B, alpha, alpha) grid.
@@ -339,6 +546,16 @@ def fused_pyramid_pallas(
     flat form may pass ``weights=None``.  ``interpret=None`` auto-resolves
     to compiled on TPU, interpreted elsewhere.
 
+    With ``c_tiles > 1`` the launch runs the channel-tiled grid
+    ``(B, alpha, alpha, c_tiles)``: a fourth sequential axis over
+    ``Cout / c_tiles`` output-channel tiles of the last level, the mid
+    pyramid computed once per cell at ``k == 0`` into persistent VMEM
+    scratch, and (when streamed) per-``k`` weight-slice DMAs revolving
+    through ``w_slots`` scratch slots — the regime that restores DMA/MXU
+    overlap to ``alpha == 1`` launches (see ``_ktiled_kernel``).
+    ``c_tiles`` must divide the last level's ``Cout``; output and skip
+    shapes are unchanged, and the result is bit-identical to ``c_tiles=1``.
+
     Returns ``(out, skip)`` with ``skip`` shaped ``(B, alpha, alpha, Q)`` —
     ``skip[..., l] == 1`` where level ``l``'s conv was short-circuited by the
     END cascade (level 0 never skips).
@@ -347,6 +564,12 @@ def fused_pyramid_pallas(
     q = program.q_convs
     assert x_slots in (1, 2), "x_slots: 1 (serial) or 2 (revolving pipeline)"
     assert len(biases) == q, "one bias per conv level"
+    if not stream_weights and weights_flat is not None:
+        raise ValueError(
+            "weights_flat was passed with stream_weights=False: the resident"
+            " kernel reads per-level weight tensors and would silently"
+            " ignore it — pass stream_weights=True (or drop weights_flat)"
+        )
     if weights is None:
         assert stream_weights and weights_flat is not None, (
             "weights=None requires stream_weights=True and weights_flat"
@@ -357,9 +580,33 @@ def fused_pyramid_pallas(
         assert weights_flat.size == sum(program.level_weight_counts()), (
             "weights_flat does not match the program's level weight counts"
         )
+    assert c_tiles >= 1 and program.levels[-1].n_out % c_tiles == 0, (
+        f"c_tiles {c_tiles} must divide the last level's Cout"
+        f" {program.levels[-1].n_out}"
+    )
+    assert c_tiles == 1 or program.levels[-1].n_out // c_tiles >= 2, (
+        "channel slices must keep >= 2 channels: the degenerate one-column"
+        " dot reassociates the Cin contraction (see"
+        " TileProgram.c_tile_options) and would break bitwise parity"
+    )
     assert x_padded.shape[1] == x_padded.shape[2] == program.padded_input, (
         "x_padded spatial dims must equal the program's padded input"
     )
+    if c_tiles > 1:
+        return _launch_ktiled(
+            x_padded,
+            weights,
+            biases,
+            program=program,
+            relu=relu,
+            end_skip=end_skip,
+            interpret=interpret,
+            stream_weights=stream_weights,
+            w_slots=w_slots,
+            x_slots=x_slots,
+            c_tiles=c_tiles,
+            weights_flat=weights_flat,
+        )
     c0 = program.levels[0].n_in
     alpha, out_region = program.alpha, program.out_region
     m_out = program.n_out
@@ -424,6 +671,127 @@ def fused_pyramid_pallas(
         # sequential (the revolving landing buffer is carried cell to cell)
         compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")
+        ),
+        interpret=resolve_interpret(interpret),
+    )(*operands)
+    return out, skip
+
+
+def _launch_ktiled(
+    x_padded: jnp.ndarray,
+    weights: list[jnp.ndarray] | None,
+    biases: list[jnp.ndarray],
+    *,
+    program: TileProgram,
+    relu: bool,
+    end_skip: bool,
+    interpret: bool | None,
+    stream_weights: bool,
+    w_slots: int,
+    x_slots: int,
+    c_tiles: int,
+    weights_flat: jnp.ndarray | None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Launch the channel-tiled ``(B, alpha, alpha, c_tiles)`` grid.
+
+    Streamed launches keep the flat concatenated weight array for the mid
+    levels (its last-level tail is simply never read) and additionally need
+    the last level's tensor in its natural 4D shape for the strided per-k
+    slice DMA — taken from ``weights`` when available, else sliced and
+    reshaped out of ``weights_flat`` (a one-off device-side copy per call,
+    tiny next to the per-cell streamed traffic)."""
+    B = x_padded.shape[0]
+    q = program.q_convs
+    cnts = program.level_weight_counts()
+    last = program.levels[-1]
+    ct_out = last.n_out // c_tiles
+    c0 = program.levels[0].n_in
+    alpha, out_region = program.alpha, program.out_region
+    m_out = program.n_out
+    kernel = functools.partial(
+        _ktiled_kernel,
+        progs=program.levels,
+        tile0=program.tile0,
+        stride0=program.stride0,
+        alpha=alpha,
+        relu=relu,
+        end_skip=end_skip,
+        stream=stream_weights,
+        w_slots=w_slots,
+        x_slots=x_slots,
+        c_tiles=c_tiles,
+        cnts=cnts,
+    )
+    in_specs = [pl.BlockSpec(memory_space=pltpu.ANY)]
+    operands: list[jnp.ndarray] = [x_padded]
+    scratch_shapes: list = [
+        pltpu.VMEM((x_slots, program.tile0, program.tile0, c0), jnp.float32),
+        pltpu.SemaphoreType.DMA((x_slots,)),
+    ]
+    if q > 1:
+        scratch_shapes.append(
+            pltpu.VMEM((last.in_size, last.in_size, last.n_in), jnp.float32)
+        )
+    if stream_weights:
+        if weights_flat is None:
+            weights_flat = jnp.concatenate([w.reshape(-1) for w in weights])
+        if weights is not None:
+            w_last = weights[-1]
+        else:
+            w_last = jax.lax.dynamic_slice_in_dim(
+                weights_flat, sum(cnts[:-1]), cnts[-1], 0
+            ).reshape(last.K, last.K, last.n_in, last.n_out)
+        in_specs += [
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ]
+        operands += [weights_flat, w_last]
+        for bias in biases:
+            in_specs.append(pl.BlockSpec(bias.shape, lambda b, i, j, k: (0,)))
+            operands.append(bias)
+        if q > 1:
+            scratch_shapes += [
+                pltpu.VMEM((1, max(cnts[:-1])), jnp.float32),
+                pltpu.SemaphoreType.DMA(()),
+            ]
+        scratch_shapes += [
+            pltpu.VMEM(
+                (w_slots, last.K, last.K, last.n_in, ct_out), jnp.float32
+            ),
+            pltpu.SemaphoreType.DMA((w_slots,)),
+        ]
+    else:
+        for w, bias in zip(weights, biases):
+            in_specs.append(
+                pl.BlockSpec(w.shape, lambda b, i, j, k: (0,) * 4)
+            )
+            in_specs.append(pl.BlockSpec(bias.shape, lambda b, i, j, k: (0,)))
+            operands += [w, bias]
+    out, skip = pl.pallas_call(
+        kernel,
+        grid=(B, alpha, alpha, c_tiles),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec(
+                (1, out_region, out_region, ct_out),
+                lambda b, i, j, k: (b, i, j, k),
+            ),
+            pl.BlockSpec((1, 1, 1, q), lambda b, i, j, k: (b, i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(
+                (B, alpha * out_region, alpha * out_region, m_out), jnp.float32
+            ),
+            jax.ShapeDtypeStruct((B, alpha, alpha, q), jnp.int32),
+        ],
+        scratch_shapes=scratch_shapes,
+        # batch stays embarrassingly parallel; the movement grid AND the
+        # channel axis are sequential — mid_scratch is carried k to k, and
+        # the revolving landing/slice buffers are carried cell to cell
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=(
+                "parallel", "arbitrary", "arbitrary", "arbitrary",
+            )
         ),
         interpret=resolve_interpret(interpret),
     )(*operands)

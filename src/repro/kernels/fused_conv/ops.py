@@ -46,8 +46,8 @@ def flatten_weights(weights: list) -> jnp.ndarray:
 @partial(
     jax.jit,
     static_argnames=(
-        "spec", "out_region", "streamed", "w_slots", "x_slots", "relu",
-        "end_skip", "interpret", "vmem_budget",
+        "spec", "out_region", "streamed", "w_slots", "x_slots", "c_tiles",
+        "relu", "end_skip", "interpret", "vmem_budget",
     ),
 )
 def fused_pyramid(
@@ -60,6 +60,7 @@ def fused_pyramid(
     streamed: bool | None = None,
     w_slots: int | None = None,
     x_slots: int | None = None,
+    c_tiles: int | None = None,
     relu: bool = True,
     end_skip: bool = True,
     interpret: bool | None = None,
@@ -71,20 +72,22 @@ def fused_pyramid(
     ``x``: (B, H, W, C) NHWC; ``weights[l]``: (K, K, Cin, Cout) and
     ``biases[l]``: (Cout,) per conv level, in chain order.  ``out_region``
     must tile the final output exactly; ``None`` picks the largest region
-    fitting the VMEM budget.  ``streamed`` / ``w_slots`` / ``x_slots`` pin
-    the weight regime and the input landing-buffer depth (the plan-driven
-    entry used by :mod:`repro.net.runner`, whose
+    fitting the VMEM budget.  ``streamed`` / ``w_slots`` / ``x_slots`` /
+    ``c_tiles`` pin the weight regime, the input landing-buffer depth, and
+    the last level's output-channel tile count (the plan-driven entry used
+    by :mod:`repro.net.runner`, whose
     :class:`~repro.core.program.LaunchPlan` already decided them); ``None``
-    derives them from the budget (double-buffered weight streaming preferred
-    over the blocking single slot; the revolving cross-cell input prefetch
-    preferred over the serial fetch whenever the grid has a successor cell
-    and the extra landing slot fits).  ``weights_flat`` optionally supplies
-    the pre-flattened streamed weights (:func:`flatten_weights`) to keep the
-    concatenation out of the per-call path — streamed callers holding only
-    the flat form may pass ``weights=None``.  ``interpret=None`` resolves to
-    compiled on TPU, interpreted on CPU/GPU.  Returns ``(out, skip)`` with
-    ``skip``: (B, alpha, alpha, Q) int32 END-cascade flags (level 0 never
-    skips).
+    derives them from the budget along ``plan_launch``'s ladder
+    (double-buffered weight streaming preferred over channel-tiled double
+    buffering over the blocking single slot; the revolving cross-cell input
+    prefetch preferred over the serial fetch whenever the grid has a
+    successor cell and the extra landing slot fits).  ``weights_flat``
+    optionally supplies the pre-flattened streamed weights
+    (:func:`flatten_weights`) to keep the concatenation out of the per-call
+    path — streamed callers holding only the flat form may pass
+    ``weights=None``.  ``interpret=None`` resolves to compiled on TPU,
+    interpreted on CPU/GPU.  Returns ``(out, skip)`` with ``skip``:
+    (B, alpha, alpha, Q) int32 END-cascade flags (level 0 never skips).
     """
     if out_region is None:
         lp = plan_launch(spec, vmem_budget=vmem_budget)
@@ -96,6 +99,8 @@ def fused_pyramid(
             streamed = lp.streamed
             if w_slots is None:
                 w_slots = lp.w_slots
+                if c_tiles is None:
+                    c_tiles = lp.c_tiles
         if x_slots is None:
             x_slots = lp.x_slots
     prog = compile_program(spec, out_region)
@@ -107,28 +112,34 @@ def fused_pyramid(
         if streamed is None
         else streamed
     )
-    if stream and w_slots is None:
-        # account for an already-pinned x_slots so the derived combo is
-        # jointly feasible (w_slots=1 + pipelined input may fit where
-        # w_slots=2 + pipelined busts)
-        w_slots = (
-            2 if prog.vmem_stream_bytes(2, xs_pinned) <= vmem_budget else 1
+    if stream and (w_slots is None or c_tiles is None):
+        # resolve the open knobs along plan_launch's rung order, accounting
+        # for already-pinned x_slots / w_slots / c_tiles so the derived
+        # combo is jointly feasible (e.g. a pinned w_slots=2 that busts
+        # untiled adopts the smallest feasible channel tiling; w_slots=1 +
+        # pipelined input may fit where w_slots=2 + pipelined busts)
+        w_slots, c_tiles = prog.resolve_stream_regime(
+            vmem_budget, xs_pinned, w_slots, c_tiles
         )
     if not stream:
         w_slots = 1  # unused by the resident kernel; pin for the jit key
+    if c_tiles is None:
+        c_tiles = 1  # channel tiling is opt-in outside the streamed ladder
     if x_slots is None:
         if prog.alpha == 1:
             x_slots = 1  # no successor cell: nothing to prefetch
         elif stream:
             x_slots = (
-                2 if prog.vmem_stream_bytes(w_slots, 2) <= vmem_budget else 1
+                2
+                if prog.vmem_stream_bytes(w_slots, 2, c_tiles) <= vmem_budget
+                else 1
             )
         else:
-            x_slots = 2 if prog.vmem_bytes(2) <= vmem_budget else 1
+            x_slots = 2 if prog.vmem_bytes(2, c_tiles) <= vmem_budget else 1
     vmem = (
-        prog.vmem_stream_bytes(w_slots, x_slots)
+        prog.vmem_stream_bytes(w_slots, x_slots, c_tiles)
         if stream
-        else prog.vmem_bytes(x_slots)
+        else prog.vmem_bytes(x_slots, c_tiles)
     )
     assert vmem <= vmem_budget, (
         f"working set {vmem} exceeds VMEM"
@@ -151,6 +162,7 @@ def fused_pyramid(
         stream_weights=stream,
         w_slots=w_slots,
         x_slots=x_slots,
+        c_tiles=c_tiles,
         weights_flat=weights_flat,
     )
 

@@ -101,7 +101,7 @@ class PartitionPlan:
     def summary(self) -> str:
         rows = [
             f"  {p.name:<24} Q={p.q_convs} region={p.launch.out_region}"
-            f" {'streamed' if p.launch.streamed else 'resident'}"
+            f" {p.launch.regime}"
             f" hbm={p.launch.hbm_bytes(self.batch):,}B"
             for p in self.pyramids
         ]
@@ -314,13 +314,24 @@ def min_vmem_budget(graph: Graph) -> int:
         for i in range(len(groups)):
             spec = FusionSpec(levels=tuple(groups[i]), input_size=bound_sizes[i])
             out_size = spec.feature_sizes()[-1]
-            cheapest = min(
-                min(prog.vmem_bytes(), prog.vmem_stream_bytes())
-                for prog in (
-                    compile_program(spec, r)
-                    for r in range(1, out_size + 1)
-                    if out_size % r == 0
+
+            def _cheapest_regime(prog) -> int:
+                # the floor now includes the channel-tiled streamed rung:
+                # a finely sliced last level can undercut even the blocking
+                # single-slot regime when one level's weights dominate
+                tiled = min(
+                    (
+                        prog.vmem_stream_bytes(2, 1, ct)
+                        for ct in prog.c_tile_options()
+                    ),
+                    default=prog.vmem_stream_bytes(),
                 )
+                return min(prog.vmem_bytes(), prog.vmem_stream_bytes(), tiled)
+
+            cheapest = min(
+                _cheapest_regime(compile_program(spec, r))
+                for r in range(1, out_size + 1)
+                if out_size % r == 0
             )
             worst = max(worst, cheapest)
     return worst

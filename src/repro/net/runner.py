@@ -167,6 +167,7 @@ def run_network(
                 streamed=pyr.launch.streamed,
                 w_slots=pyr.launch.w_slots if pyr.launch.streamed else None,
                 x_slots=pyr.launch.x_slots,
+                c_tiles=pyr.launch.c_tiles,
                 relu=pyr.relu,
                 end_skip=end_skip,
                 interpret=interpret,

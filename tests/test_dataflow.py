@@ -138,18 +138,27 @@ class TestHaloByteModel:
         assert res.modeled_cycles() <= db.modeled_cycles()
 
     def test_stream_slots_ladder(self):
-        """plan_launch prefers resident, then 2-slot streaming, then 1-slot;
-        ResNet-18's 512-channel block only fits the single slot (two copies
-        of one 9.4 MB weight level bust 16 MiB)."""
+        """plan_launch prefers resident, then 2-slot streaming, then
+        channel-tiled 2-slot streaming, then 1-slot; ResNet-18's 512-channel
+        block cannot hold two whole copies of one 9.4 MB weight level in
+        16 MiB, but two quarter slices fit — it lands on the channel-tiled
+        double-buffered rung instead of the blocking single slot."""
         lp = plan_launch(resnet18_fusions()[7])
-        assert lp.streamed and lp.w_slots == 1
-        # region preference stays primary: the largest region fits 1-slot, so
-        # a smaller region must not be chosen just to afford 2 slots
+        assert lp.streamed and lp.w_slots == 2 and lp.c_tiles > 1
+        # region preference stays primary: the largest region fits this
+        # rung, so a smaller region must not be chosen to afford more slots
         assert lp.out_region == lp.spec.feature_sizes()[-1]
         prog = lp.program
         assert prog.vmem_stream_bytes(2) > VMEM_BUDGET_BYTES
+        assert prog.vmem_stream_bytes(2, 1, lp.c_tiles) <= VMEM_BUDGET_BYTES
         assert prog.vmem_stream_bytes(1) <= VMEM_BUDGET_BYTES
-        # a small chain that streams fits both slots: 2 is chosen
+        # the blocking single slot remains the terminal rung: under a budget
+        # where even the finest channel slices bust two slots, w_slots == 1
+        floor = prog.vmem_stream_bytes(1)
+        tight = plan_launch(resnet18_fusions()[7], vmem_budget=floor)
+        if tight is not None and tight.streamed and tight.c_tiles == 1:
+            assert tight.w_slots == 1
+        # a small chain that streams fits both slots untiled: 2 is chosen
         tiny = plan_launch(LENET5_FUSION, vmem_budget=40_000)
         if tiny is not None and tiny.streamed:
             assert tiny.w_slots == 2
