@@ -11,9 +11,13 @@ metric *regresses* by more than ``--tolerance`` (default 10%):
   weight-DMA granule of each tracked kernel workload (``slice_bytes`` is 0
   resident, the last level's whole tensor when untiled, and shrinks by
   ``c_tiles`` on channel-tiled launches — a regression back to the untiled
-  blocking regime multiplies it and fails the gate);
-* ``partition.<model>.auto``: ``hbm_bytes``, ``modeled_latency_us`` — the
-  auto-partitioner's whole-network plan quality for every zoo model.
+  blocking regime multiplies it and fails the gate).  Each workload has a
+  bf16 twin row (``<workload>_bf16``) gated on the same metrics, so losing
+  the low-precision plan re-tiering (e.g. a bf16 launch regressing from
+  resident back to streamed) fails CI just like an f32 regression;
+* ``partition.<model>.<strategy>`` for ``auto`` and ``auto_bf16``:
+  ``hbm_bytes``, ``modeled_latency_us`` — the auto-partitioner's
+  whole-network plan quality for every zoo model at both compute dtypes.
 
 The launch rows also carry ungated context columns (``c_tiles``,
 ``k_pipeline_cycles_saved``, ``pipeline_cycles_saved``) so the committed
@@ -43,6 +47,7 @@ LAUNCH_METRICS = (
     "hbm_bytes_total", "modeled_cycles", "input_bytes_halo", "slice_bytes",
 )
 PARTITION_METRICS = ("hbm_bytes", "modeled_latency_us")
+PARTITION_STRATEGIES = ("auto", "auto_bf16")
 
 
 def gated_metrics(bench: dict) -> dict[str, float]:
@@ -52,8 +57,11 @@ def gated_metrics(bench: dict) -> dict[str, float]:
         for m in LAUNCH_METRICS:
             out[f"kernel_dataflow/{name}/{m}"] = float(row[m])
     for model, rows in bench["partition"].items():
-        for m in PARTITION_METRICS:
-            out[f"partition/{model}/auto/{m}"] = float(rows["auto"][m])
+        for strategy in PARTITION_STRATEGIES:
+            for m in PARTITION_METRICS:
+                out[f"partition/{model}/{strategy}/{m}"] = float(
+                    rows[strategy][m]
+                )
     return out
 
 
@@ -96,7 +104,7 @@ def main(argv: list[str] | None = None) -> int:
                 "launches": bench["kernel_dataflow"]["launches"]
             },
             "partition": {
-                model: {"auto": rows["auto"]}
+                model: {s: rows[s] for s in PARTITION_STRATEGIES}
                 for model, rows in bench["partition"].items()
             },
         }

@@ -51,7 +51,10 @@ def _timed_median_ms(fn, reps: int = WALLCLOCK_REPS) -> float:
 
 def _partition_comparison(csv=print) -> dict:
     """Auto vs paper vs layer-by-layer for every zoo model: modeled HBM
-    traffic and DS-1 latency of all pyramid launches (batch 1)."""
+    traffic and DS-1 latency of all pyramid launches (batch 1).  The
+    ``auto_bf16`` strategy re-runs the DP with 2-byte operands so the JSON
+    records how the halved working set re-tiers the plan ladder (regime
+    flips and cut-point moves) alongside the ~2x HBM reduction."""
     from repro.net.graph import MODELS
     from repro.net.partition import (
         auto_partition,
@@ -66,6 +69,7 @@ def _partition_comparison(csv=print) -> dict:
         rows = {}
         for strategy, plan in (
             ("auto", auto_partition(graph)),
+            ("auto_bf16", auto_partition(graph, compute_dtype="bfloat16")),
             ("paper", paper_partition(graph)),
             ("layerwise", layerwise_partition(graph)),
         ):
@@ -97,6 +101,18 @@ def _partition_comparison(csv=print) -> dict:
             f"partition_savings,{model},auto_vs_layerwise,"
             f"{(layer - auto) / layer:.1%},auto_vs_paper,"
             f"{(paper - auto) / paper:.1%}"
+        )
+        bf16 = rows["auto_bf16"]
+        flips = sum(
+            1
+            for p32, p16 in zip(rows["auto"]["pyramids"], bf16["pyramids"])
+            if p32["regime"] != p16["regime"]
+        ) if rows["auto"]["launches"] == bf16["launches"] else None
+        csv(
+            f"partition_dtype,{model},bf16_hbm_ratio,"
+            f"{auto / bf16['hbm_bytes']:.2f}x,launches,"
+            f"{rows['auto']['launches']}->{bf16['launches']},regime_flips,"
+            f"{'resegmented' if flips is None else flips}"
         )
         out[model] = rows
     return out
@@ -133,60 +149,78 @@ def _kernel_dataflow(csv=print, dry_run: bool = True) -> dict:
         "vgg_blocks12_q4_224": VGG_FUSION,
         "resnet18_b7_streamed": resnet18_fusions()[7],
     }
+    # every workload is planned twice: at f32 and at bf16.  The bf16 twin
+    # rides as ``<name>_bf16`` so the regression gate tracks both ladders;
+    # the dtype row below reports the HBM ratio and any plan-tier flip the
+    # halved bytes buy (e.g. streamed -> resident, fewer c_tiles).
     for name, spec in specs.items():
-        lp = plan_launch(spec)
-        flow = launch_dataflow(lp.program, streamed=lp.streamed)
-        # the fully-blocking schedule: serial input fetch AND blocking
-        # weight DMA, at the launched c_tiles — what every DMA/MXU overlap
-        # (cross-cell x pipeline + k-axis slice pipeline) is measured against
-        cycles_serial = dataclasses.replace(
-            lp, x_slots=1, w_slots=1
-        ).modeled_cycles()
-        # only advertise the pipelined latency when the x_slots=2 kernel is
-        # actually buildable (the planner's own ladder rule) — otherwise the
-        # row reports the launched regime
-        cycles_pipe = lp.with_input_pipeline().modeled_cycles()
-        # the k-axis share alone: the launched plan vs its blocking-slice
-        # (w_slots=1) twin — 0 for resident launches, > 0 exactly when the
-        # weight pipeline (channel-tiled or whole-level) overlaps something
-        cycles_w1 = dataclasses.replace(lp, w_slots=1).modeled_cycles()
-        row = {
-            **flow,
-            "alpha": lp.program.alpha,
-            "out_region": lp.out_region,
-            "tile0": lp.program.tile0,
-            "streamed": lp.streamed,
-            "w_slots": lp.w_slots,
-            "x_slots": lp.x_slots,
-            "c_tiles": lp.c_tiles,
-            "slice_bytes": lp.slice_bytes(),
-            "hbm_bytes_total": lp.hbm_bytes(),
-            "input_reduction": (
-                flow["input_bytes_whole_image"] / flow["input_bytes_halo"]
-            ),
-            "modeled_cycles": lp.modeled_cycles(),
-            "modeled_cycles_serial": cycles_serial,
-            "modeled_cycles_pipelined": cycles_pipe,
-            "pipeline_cycles_saved": cycles_serial - cycles_pipe,
-            "k_pipeline_cycles_saved": cycles_w1 - lp.modeled_cycles(),
-        }
-        out["launches"][name] = row
-        for model in ("whole_image", "halo"):
+        for dtype in ("float32", "bfloat16"):
+            lp = plan_launch(spec, compute_dtype=dtype)
+            flow = launch_dataflow(lp.program, streamed=lp.streamed)
+            # the fully-blocking schedule: serial input fetch AND blocking
+            # weight DMA, at the launched c_tiles — what every DMA/MXU
+            # overlap (cross-cell x pipeline + k-axis slice pipeline) is
+            # measured against
+            cycles_serial = dataclasses.replace(
+                lp, x_slots=1, w_slots=1
+            ).modeled_cycles()
+            # only advertise the pipelined latency when the x_slots=2 kernel
+            # is actually buildable (the planner's own ladder rule) —
+            # otherwise the row reports the launched regime
+            cycles_pipe = lp.with_input_pipeline().modeled_cycles()
+            # the k-axis share alone: the launched plan vs its blocking-slice
+            # (w_slots=1) twin — 0 for resident launches, > 0 exactly when
+            # the weight pipeline (channel-tiled or whole-level) overlaps
+            cycles_w1 = dataclasses.replace(lp, w_slots=1).modeled_cycles()
+            row = {
+                **flow,
+                "compute_dtype": dtype,
+                "regime": lp.regime,
+                "alpha": lp.program.alpha,
+                "out_region": lp.out_region,
+                "tile0": lp.program.tile0,
+                "streamed": lp.streamed,
+                "w_slots": lp.w_slots,
+                "x_slots": lp.x_slots,
+                "c_tiles": lp.c_tiles,
+                "slice_bytes": lp.slice_bytes(),
+                "hbm_bytes_total": lp.hbm_bytes(),
+                "input_reduction": (
+                    flow["input_bytes_whole_image"] / flow["input_bytes_halo"]
+                ),
+                "modeled_cycles": lp.modeled_cycles(),
+                "modeled_cycles_serial": cycles_serial,
+                "modeled_cycles_pipelined": cycles_pipe,
+                "pipeline_cycles_saved": cycles_serial - cycles_pipe,
+                "k_pipeline_cycles_saved": cycles_w1 - lp.modeled_cycles(),
+            }
+            key = name if dtype == "float32" else f"{name}_bf16"
+            out["launches"][key] = row
+            for model in ("whole_image", "halo"):
+                csv(
+                    f"kernel_dataflow,{key},{model},"
+                    f"{flow[f'input_bytes_{model}']},{flow['weight_bytes']},"
+                    f"{flow['output_bytes']},{lp.regime}"
+                )
             csv(
-                f"kernel_dataflow,{name},{model},"
-                f"{flow[f'input_bytes_{model}']},{flow['weight_bytes']},"
-                f"{flow['output_bytes']},{lp.regime}"
+                f"kernel_dataflow_reduction,{key},input,"
+                f"{row['input_reduction']:.1f}x,alpha,{row['alpha']}"
             )
+            csv(
+                f"kernel_dataflow_pipeline,{key},serial,{cycles_serial},"
+                f"pipelined,{cycles_pipe},saved,{row['pipeline_cycles_saved']},"
+                f"x_slots,{lp.x_slots},c_tiles,{lp.c_tiles},"
+                f"slice_bytes,{row['slice_bytes']},"
+                f"k_saved,{row['k_pipeline_cycles_saved']}"
+            )
+        f32, b16 = out["launches"][name], out["launches"][f"{name}_bf16"]
         csv(
-            f"kernel_dataflow_reduction,{name},input,"
-            f"{row['input_reduction']:.1f}x,alpha,{row['alpha']}"
-        )
-        csv(
-            f"kernel_dataflow_pipeline,{name},serial,{cycles_serial},"
-            f"pipelined,{cycles_pipe},saved,{row['pipeline_cycles_saved']},"
-            f"x_slots,{lp.x_slots},c_tiles,{lp.c_tiles},"
-            f"slice_bytes,{row['slice_bytes']},"
-            f"k_saved,{row['k_pipeline_cycles_saved']}"
+            f"kernel_dataflow_dtype,{name},bf16_hbm_ratio,"
+            f"{f32['hbm_bytes_total'] / b16['hbm_bytes_total']:.2f}x,"
+            f"cycles_ratio,"
+            f"{f32['modeled_cycles'] / b16['modeled_cycles']:.2f}x,"
+            f"regime,{f32['regime']}->{b16['regime']},"
+            f"c_tiles,{f32['c_tiles']}->{b16['c_tiles']}"
         )
 
     if not dry_run:
@@ -226,12 +260,16 @@ def _kernel_dataflow(csv=print, dry_run: bool = True) -> dict:
 def _lenet_e2e(csv=print) -> dict:
     """End-to-end LeNet-5 through run_network: wall clock + skip fractions
     (the only zoo model cheap enough to execute at paper scale in interpret
-    mode)."""
+    mode), then the same network at bf16 — wall clock, modeled HBM, and the
+    max-abs logit error against the f32 run, alongside the documented
+    tolerance (``bf16_logit_tol``) the CI smoke job enforces."""
     import jax
+    import jax.numpy as jnp
 
     from repro.net.graph import lenet5
     from repro.net.partition import auto_partition
     from repro.net.runner import (
+        bf16_logit_tol,
         init_network_params,
         prepare_network_params,
         run_network,
@@ -239,12 +277,12 @@ def _lenet_e2e(csv=print) -> dict:
     )
 
     graph = lenet5()
-    plan = auto_partition(graph, batch=4)
-    params = prepare_network_params(
-        plan, init_network_params(graph, jax.random.PRNGKey(0))
-    )
+    raw = init_network_params(graph, jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 32, 1))
-    _, skips = run_network(x, params, plan=plan)  # skip stats (+ jit warm)
+
+    plan = auto_partition(graph, batch=4)
+    params = prepare_network_params(plan, raw)
+    logits_f32, skips = run_network(x, params, plan=plan)  # + jit warm
 
     def call():
         logits, _ = run_network(x, params, plan=plan)
@@ -253,12 +291,34 @@ def _lenet_e2e(csv=print) -> dict:
     dt_ms = _timed_median_ms(call)
     frac = skip_fractions(skips)
     csv(f"lenet_e2e,auto_plan,interpret,{dt_ms:.1f},ms_per_batch4")
+
+    plan16 = auto_partition(graph, batch=4, compute_dtype="bfloat16")
+    params16 = prepare_network_params(plan16, raw)
+    logits_b16, _ = run_network(x, params16, plan=plan16)  # jit warm
+
+    def call16():
+        logits, _ = run_network(x, params16, plan=plan16)
+        jax.block_until_ready(logits)
+
+    dt16_ms = _timed_median_ms(call16)
+    err = float(jnp.max(jnp.abs(
+        logits_b16.astype(jnp.float32) - logits_f32
+    )))
+    tol = bf16_logit_tol(logits_f32)
+    csv(f"lenet_e2e_bf16,auto_plan,interpret,{dt16_ms:.1f},ms_per_batch4,"
+        f"max_abs_err,{err:.4f},tol,{tol:.4f}")
     return {
         "hbm_bytes": plan.hbm_bytes(),
         "wallclock_ms": dt_ms,
         "wallclock_reps": WALLCLOCK_REPS,
         "batch": 4,
         "skip_fractions": frac,
+        "bf16": {
+            "hbm_bytes": plan16.hbm_bytes(),
+            "wallclock_ms": dt16_ms,
+            "max_abs_err": err,
+            "logit_tol": tol,
+        },
     }
 
 

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.net.graph import MODELS, infer_shapes
 from repro.net.partition import auto_partition, layerwise_partition
 from repro.net.runner import (
+    bf16_logit_tol,
     init_network_params,
     reference_network,
     run_network,
@@ -39,13 +40,19 @@ def main() -> None:
     ap.add_argument("--model", choices=sorted(MODELS), default="lenet")
     ap.add_argument("--input-size", type=int, default=None)
     ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--dtype", choices=("float32", "bfloat16"),
+                    default="float32",
+                    help="compute dtype for activations/weights; "
+                         "accumulation stays f32 either way (DESIGN.md #11)")
     args = ap.parse_args()
 
     size = args.input_size or DEFAULT_SIZE[args.model]
-    graph = MODELS[args.model](input_size=size, num_classes=10)
+    graph = MODELS[args.model](input_size=size, num_classes=10,
+                               compute_dtype=args.dtype)
     shapes = infer_shapes(graph)
     print(f"{graph.name}: {len(graph.nodes)} nodes, input {size}x{size}, "
-          f"logits {shapes[graph.output.name].channels}")
+          f"logits {shapes[graph.output.name].channels}, "
+          f"compute dtype {graph.compute_dtype}")
 
     plan = auto_partition(graph, batch=args.batch)
     layer = layerwise_partition(graph, batch=args.batch)
@@ -63,7 +70,14 @@ def main() -> None:
     print(f"run_network: logits {logits.shape} in {time.time() - t0:.1f}s "
           "(interpret mode, includes compile)")
     ref = reference_network(x, graph, params)
-    print("max |err| vs monolithic reference:", float(jnp.abs(logits - ref).max()))
+    err = float(jnp.abs(logits.astype(jnp.float32) - ref).max())
+    print("max |err| vs monolithic f32 reference:", err)
+    if args.dtype == "bfloat16":
+        # the documented low-precision contract (DESIGN.md #11): bf16
+        # operands, f32 accumulation, error relative to logit magnitude
+        tol = bf16_logit_tol(ref)
+        print(f"bf16 logit tolerance: {tol:.4f}")
+        assert err <= tol, f"bf16 error {err} exceeds tolerance {tol}"
 
     # sparse input: most tiles die after level 0, the END cascade skips the
     # deeper convs of each pyramid.  Re-partition with the paper's

@@ -32,6 +32,7 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
+from .dtypes import mxu_throughput
 from .fusion import FusionPlan, FusionSpec
 
 
@@ -148,6 +149,17 @@ def ds1_split_cycles_per_movement(
     mid = sum(terms[:last_conv])
     last = sum(terms[last_conv:]) + p.n
     return mid, last
+
+
+def mxu_scaled_cycles(cycles: int, compute_dtype) -> int:
+    """Compute cycles at ``compute_dtype``: an Eq. (3)/(4) cycle count —
+    calibrated at the float32 rate — divided by the dtype's relative MXU
+    throughput (:func:`repro.core.dtypes.mxu_throughput`; bf16 operands
+    double the systolic array's effective rate, int8 quadruples it), ceil'd
+    so a movement never rounds to free.  The compute side of the dtype-aware
+    overlap model: DMA terms scale with ``bytes_per_val``, compute divides
+    by this factor."""
+    return -(-cycles // mxu_throughput(compute_dtype))
 
 
 def channel_tiled_body_cycles(

@@ -1,0 +1,78 @@
+"""The single source of per-value byte widths and compute dtypes.
+
+Every byte model in the repo — :class:`~repro.core.program.TileProgram`'s
+VMEM/HBM accounting, the paper-level operational-intensity helpers in
+:mod:`repro.core.intensity`, the DMA terms of
+:meth:`~repro.core.program.LaunchPlan.modeled_cycles` — derives its
+``bytes_per_val`` from :data:`DTYPE_BYTES` so the planner, the kernels, and
+the benchmarks can never disagree about how wide a value is.
+
+Dtypes are carried as canonical *name strings* (``"float32"``,
+``"bfloat16"``, ``"int8"``): programs and plans are frozen hashable
+dataclasses used as jit static arguments, and a string keeps them that way
+across pickling/caching while :func:`jnp_dtype` recovers the jnp dtype at
+kernel-launch time.
+
+``int8`` is modeled (byte accounting, MXU throughput) but not yet executable
+by the fused kernels — the quantized pyramid is the documented stretch; see
+:data:`EXEC_DTYPES`.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# bytes per value of every dtype the byte models understand
+DTYPE_BYTES: dict[str, int] = {
+    "float32": 4,
+    "bfloat16": 2,
+    "int8": 1,
+    "int32": 4,
+}
+
+# dtypes the fused kernels can actually run (bf16 operands accumulate f32
+# via preferred_element_type; int8 needs the quantized-pyramid epilogue)
+EXEC_DTYPES: tuple[str, ...] = ("float32", "bfloat16")
+
+# relative MXU throughput vs float32: bf16 operands double the systolic
+# array's effective rate, int8 quadruples it (the paper's low-precision SOP
+# premise mapped onto the TPU's native mixed-precision modes)
+MXU_THROUGHPUT: dict[str, int] = {
+    "float32": 1,
+    "bfloat16": 2,
+    "int8": 4,
+}
+
+# working precision in bits — the trailing digit-stream term of Eq. (3)
+DTYPE_BITS: dict[str, int] = {k: 8 * v for k, v in DTYPE_BYTES.items()}
+
+
+def canonical_dtype(dtype) -> str:
+    """Canonical name string of ``dtype`` (name, jnp dtype, or np dtype).
+
+    Raises ``KeyError`` with the known table on anything the byte models
+    don't understand, so a typo'd dtype fails at plan time, not mid-kernel.
+    """
+    name = dtype if isinstance(dtype, str) else jnp.dtype(dtype).name
+    if name not in DTYPE_BYTES:
+        raise KeyError(
+            f"unknown compute dtype {name!r}; known: {sorted(DTYPE_BYTES)}"
+        )
+    return name
+
+
+def dtype_bytes(dtype) -> int:
+    """Bytes per value, via :data:`DTYPE_BYTES` — the only place a byte
+    width may come from."""
+    return DTYPE_BYTES[canonical_dtype(dtype)]
+
+
+def jnp_dtype(dtype) -> jnp.dtype:
+    """The jnp dtype for a canonical name (kernel-launch side of the
+    name-string convention)."""
+    return jnp.dtype(canonical_dtype(dtype))
+
+
+def mxu_throughput(dtype) -> int:
+    """Relative MXU throughput factor vs float32 (>= 1)."""
+    return MXU_THROUGHPUT[canonical_dtype(dtype)]

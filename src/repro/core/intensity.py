@@ -1,6 +1,11 @@
 """Operational-intensity model (paper Figs. 10-11, roofline x-axis).
 
-Off-chip traffic accounting (1 byte/value at n=8-bit precision):
+Off-chip traffic accounting (the default ``bytes_per_val`` flows from the
+:data:`~repro.core.dtypes.DTYPE_BYTES` table at the paper's n=8-bit SOP
+precision, i.e. int8's 1 byte/value — the kernel-level byte models in
+:mod:`repro.core.program` use the same table at their program's
+``compute_dtype``, so paper-level and launch-level accounting can no longer
+silently disagree about value width):
 
 * ``unfused``  — layer-by-layer dataflow: every level reads its input map
   from off-chip and writes its output map back, plus weights once.
@@ -23,10 +28,17 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from .cycle_model import naive_alpha
+from .dtypes import DTYPE_BYTES
 from .fusion import FusionPlan, FusionSpec
 
+# the paper's figures account one byte per value (n=8-bit SOP precision);
+# pass bytes_per_val=DTYPE_BYTES[...] explicitly to account other dtypes
+PAPER_BYTES_PER_VAL = DTYPE_BYTES["int8"]
 
-def weight_bytes(spec: FusionSpec, bytes_per_val: int = 1) -> int:
+
+def weight_bytes(
+    spec: FusionSpec, bytes_per_val: int = PAPER_BYTES_PER_VAL
+) -> int:
     return sum(
         lvl.K * lvl.K * lvl.n_in * lvl.n_out * bytes_per_val
         for lvl in spec.levels
@@ -34,7 +46,9 @@ def weight_bytes(spec: FusionSpec, bytes_per_val: int = 1) -> int:
     )
 
 
-def unfused_bytes(spec: FusionSpec, bytes_per_val: int = 1) -> int:
+def unfused_bytes(
+    spec: FusionSpec, bytes_per_val: int = PAPER_BYTES_PER_VAL
+) -> int:
     sizes = spec.feature_sizes()
     total = 0
     for l, lvl in enumerate(spec.levels):
@@ -44,7 +58,11 @@ def unfused_bytes(spec: FusionSpec, bytes_per_val: int = 1) -> int:
 
 
 def fused_bytes(
-    spec: FusionSpec, plan: FusionPlan, *, uniform: bool = True, bytes_per_val: int = 1
+    spec: FusionSpec,
+    plan: FusionPlan,
+    *,
+    uniform: bool = True,
+    bytes_per_val: int = PAPER_BYTES_PER_VAL,
 ) -> int:
     sizes = spec.feature_sizes()
     h1 = plan.levels[0].tile
@@ -78,7 +96,7 @@ def intensity_improvement(spec: FusionSpec, plan: FusionPlan) -> float:
 
 
 def launch_dataflow(program, batch: int = 1, *, streamed: bool = False) -> dict:
-    """Per-launch HBM byte breakdown of one kernel launch (float32 traffic).
+    """Per-launch HBM byte breakdown of one kernel launch.
 
     The bridge between the paper-level OI accounting above and the kernel's
     :class:`~repro.core.program.TileProgram` model: the same halo-tile input
@@ -86,17 +104,20 @@ def launch_dataflow(program, batch: int = 1, *, streamed: bool = False) -> dict:
     that :meth:`TileProgram.hbm_bytes` charges and the partitioner DP
     minimizes.  ``input_bytes_whole_image`` is the retired
     whole-image-resident dataflow (every grid cell re-read the padded image),
-    reported so the benchmark trajectory has a before/after column.  The
-    components sum to ``program.hbm_bytes(batch, streamed=streamed)``
-    (asserted in ``tests/test_dataflow.py``).
+    reported so the benchmark trajectory has a before/after column.  Input,
+    weight, and output bytes are charged at the program's ``compute_dtype``
+    width; skip flags stay int32 regardless.  The components sum to
+    ``program.hbm_bytes(batch, streamed=streamed)`` (asserted in
+    ``tests/test_dataflow.py``).
     """
     a2 = batch * program.alpha ** 2
+    bpv = program.bytes_per_val
     return {
         "input_bytes_whole_image": program.input_hbm_bytes(
             batch, whole_image=True
         ),
         "input_bytes_halo": program.input_hbm_bytes(batch),
-        "weight_bytes": 4 * (a2 if streamed else 1) * program.weight_floats(),
-        "output_bytes": 4 * batch * program.out_size ** 2 * program.n_out,
-        "skip_bytes": 4 * a2 * program.q_convs,
+        "weight_bytes": bpv * (a2 if streamed else 1) * program.weight_floats(),
+        "output_bytes": bpv * batch * program.out_size ** 2 * program.n_out,
+        "skip_bytes": DTYPE_BYTES["int32"] * a2 * program.q_convs,
     }

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, replace
 
+from .dtypes import DTYPE_BYTES, canonical_dtype
 from .fusion import FusionSpec, receptive_window
 
 VMEM_BUDGET_BYTES = 16 * 1024 * 1024  # v5e per-core VMEM
@@ -165,10 +166,20 @@ class TileProgram:
     pad_hi: int
     out_size: int
     n_out: int
+    # canonical dtype name of activations/weights moving through the launch
+    # (a string keeps the program hashable for jit); mid-level dot products
+    # always accumulate float32 regardless — see DESIGN.md §11
+    compute_dtype: str = "float32"
 
     @property
     def q_convs(self) -> int:
         return len(self.levels)
+
+    @property
+    def bytes_per_val(self) -> int:
+        """Bytes per activation/weight value, from the one DTYPE_BYTES
+        table — every byte quantity below scales with this."""
+        return DTYPE_BYTES[self.compute_dtype]
 
     @property
     def padded_input(self) -> int:
@@ -230,9 +241,15 @@ class TileProgram:
         pyramid.  ``c_tiles`` only shrinks the last level's working tile —
         resident weights stay whole, so channel tiling is a streamed-regime
         tool (the planner never picks it resident); the resident kernel still
-        accepts it for parity testing.
+        accepts it for parity testing.  Every buffer holds ``compute_dtype``
+        values (the per-level f32 dot accumulator is compiler-managed vector
+        state, not declared scratch), so the whole set scales with
+        ``bytes_per_val`` — halving it is what flips streamed plans back to
+        resident under bf16.
         """
-        return 4 * (self._tile_floats(x_slots, c_tiles) + self.weight_floats())
+        return self.bytes_per_val * (
+            self._tile_floats(x_slots, c_tiles) + self.weight_floats()
+        )
 
     def vmem_stream_bytes(
         self, slots: int = 1, x_slots: int = 1, c_tiles: int = 1
@@ -261,7 +278,7 @@ class TileProgram:
         else:
             floats += slots * max(cnts)
         floats += sum(p.n_out for p in self.levels)  # biases
-        return 4 * floats
+        return self.bytes_per_val * floats
 
     def resolve_stream_regime(
         self,
@@ -308,7 +325,9 @@ class TileProgram:
         (``tile0^2 * C`` floats at :data:`HBM_BYTES_PER_CYCLE`) — the
         quantity the cross-cell prefetch pipeline hides behind compute."""
         c0 = self.levels[0].n_in
-        return -(-4 * self.tile0 ** 2 * c0 // HBM_BYTES_PER_CYCLE)
+        return -(
+            -self.bytes_per_val * self.tile0 ** 2 * c0 // HBM_BYTES_PER_CYCLE
+        )
 
     def input_hbm_bytes(self, batch: int = 1, *, whole_image: bool = False) -> int:
         """Per-launch input read traffic.  The halo-tile dataflow fetches one
@@ -319,7 +338,7 @@ class TileProgram:
         C``), kept for before/after benchmark comparisons."""
         c0 = self.levels[0].n_in
         tile = self.padded_input ** 2 if whole_image else self.tile0 ** 2
-        return 4 * batch * self.alpha ** 2 * tile * c0
+        return self.bytes_per_val * batch * self.alpha ** 2 * tile * c0
 
     def hbm_bytes(
         self, batch: int = 1, *, streamed: bool = False, c_tiles: int = 1
@@ -337,24 +356,30 @@ class TileProgram:
         movement, it does not add traffic."""
         del c_tiles  # traffic-invariant; see docstring
         w_reads = batch * self.alpha ** 2 if streamed else 1
-        write = (
-            batch * self.out_size ** 2 * self.n_out
-            + batch * self.alpha ** 2 * self.q_convs  # int32 skip flags
+        vals = w_reads * self.weight_floats() + batch * self.out_size ** 2 * self.n_out
+        # skip flags stay int32 whatever the compute dtype
+        flag_bytes = (
+            DTYPE_BYTES["int32"] * batch * self.alpha ** 2 * self.q_convs
         )
         return (
             self.input_hbm_bytes(batch)
-            + 4 * (w_reads * self.weight_floats() + write)
+            + self.bytes_per_val * vals
+            + flag_bytes
         )
 
 
-def compile_program(spec: FusionSpec, out_region: int) -> TileProgram:
+def compile_program(
+    spec: FusionSpec, out_region: int, *, compute_dtype="float32"
+) -> TileProgram:
     """Lower a fusion spec + output region to the kernel's static program.
 
     Requires the final output to be exactly tiled by ``out_region`` (the
     uniform-stride grid — every level moves ``alpha`` times per dim).  Every
     pool level must directly follow a conv level: pools execute as epilogues
     of the preceding conv tile (Fig. 4), so a leading or doubled pool has no
-    conv program to fold into.
+    conv program to fold into.  ``compute_dtype`` (name string or jnp dtype)
+    sets the byte width of every activation/weight the program accounts —
+    window math is dtype-invariant, the byte and cycle models are not.
     """
     levels = spec.levels
     assert levels and levels[0].kind == "conv", (
@@ -428,6 +453,7 @@ def compile_program(spec: FusionSpec, out_region: int) -> TileProgram:
         pad_hi=pad_hi,
         out_size=out_size,
         n_out=chain_channels(spec),
+        compute_dtype=canonical_dtype(compute_dtype),
     )
 
 
@@ -509,7 +535,7 @@ class LaunchPlan:
         if not self.streamed:
             return 0
         cnt = self.program.level_weight_counts()[-1]
-        return 4 * -(-cnt // self.c_tiles)
+        return self.program.bytes_per_val * -(-cnt // self.c_tiles)
 
     def with_input_pipeline(
         self, vmem_budget: int = VMEM_BUDGET_BYTES
@@ -548,15 +574,24 @@ class LaunchPlan:
         (``x_slots=1``) pays ``(input_dma + body) * cells``; the revolving
         cross-cell prefetch (``x_slots=2``) pays
         ``warmup_fill + body + (cells - 1) * max(body, input_dma)`` — never
-        worse than serial, equal at ``alpha == 1`` (no successor cell)."""
+        worse than serial, equal at ``alpha == 1`` (no successor cell).
+
+        Both sides of the overlap are dtype-aware: every weight-DMA term
+        scales with the program's ``bytes_per_val``, and the MXU compute
+        cycles divide by :func:`~repro.core.dtypes.mxu_throughput` (bf16
+        operands double the systolic rate) — so narrowing the dtype shrinks
+        the DMA *and* the compute it hides behind."""
         from .cycle_model import (
             channel_tiled_body_cycles,
             ds1_cycles_per_movement,
             ds1_split_cycles_per_movement,
             grid_pipeline_cycles,
+            mxu_scaled_cycles,
         )
 
-        compute = ds1_cycles_per_movement(self.spec)
+        bpv = self.program.bytes_per_val
+        cdt = self.program.compute_dtype
+        compute = mxu_scaled_cycles(ds1_cycles_per_movement(self.spec), cdt)
         body = compute
         if self.streamed:
             cnts = self.program.level_weight_counts()
@@ -564,9 +599,11 @@ class LaunchPlan:
                 compute_mid, compute_last = ds1_split_cycles_per_movement(
                     self.spec
                 )
-                dma_mid = -(-4 * sum(cnts[:-1]) // HBM_BYTES_PER_CYCLE)
+                compute_mid = mxu_scaled_cycles(compute_mid, cdt)
+                compute_last = mxu_scaled_cycles(compute_last, cdt)
+                dma_mid = -(-bpv * sum(cnts[:-1]) // HBM_BYTES_PER_CYCLE)
                 dma_slice = -(
-                    -4 * -(-cnts[-1] // self.c_tiles) // HBM_BYTES_PER_CYCLE
+                    -bpv * -(-cnts[-1] // self.c_tiles) // HBM_BYTES_PER_CYCLE
                 )
                 body = channel_tiled_body_cycles(
                     compute_mid,
@@ -577,9 +614,9 @@ class LaunchPlan:
                     pipelined=self.w_slots > 1,
                 )
             else:
-                dma = -(-4 * sum(cnts) // HBM_BYTES_PER_CYCLE)
+                dma = -(-bpv * sum(cnts) // HBM_BYTES_PER_CYCLE)
                 if self.w_slots > 1:
-                    fill = -(-4 * cnts[0] // HBM_BYTES_PER_CYCLE)
+                    fill = -(-bpv * cnts[0] // HBM_BYTES_PER_CYCLE)
                     body = fill + max(compute, dma - fill)
                 else:
                     body = compute + dma
@@ -598,6 +635,7 @@ def plan_launch(
     *,
     allow_stream: bool = True,
     prefer_region: str = "largest",
+    compute_dtype="float32",
 ) -> LaunchPlan | None:
     """Pick the launch configuration for one pyramid: an exactly-tiling
     output region whose program fits the VMEM budget, preferring
@@ -616,8 +654,13 @@ def plan_launch(
     ``x_slots=1``.  ``prefer_region="largest"`` (default) minimizes grid
     overhead; ``"smallest"`` is the paper's smallest-tile preference —
     maximal tile grids, i.e. END skipping at its finest granularity.
+    ``compute_dtype`` re-tiers the whole ladder: the rungs are walked with
+    that dtype's byte widths, so a chain that busts VMEM resident at float32
+    may climb back to resident (or from channel-tiled to plain streamed x2)
+    at bfloat16 — the launched kernel then moves that dtype end to end.
     Returns ``None`` when no single launch fits."""
     assert prefer_region in ("largest", "smallest")
+    compute_dtype = canonical_dtype(compute_dtype)
     out_size = spec.feature_sizes()[-1]
     regions = [r for r in range(out_size, 0, -1) if out_size % r == 0]
     if prefer_region == "smallest":
@@ -627,7 +670,7 @@ def plan_launch(
         return (1,) if prog.alpha == 1 else (2, 1)
 
     for r in regions:
-        prog = compile_program(spec, r)
+        prog = compile_program(spec, r, compute_dtype=compute_dtype)
         for xs in x_options(prog):
             if prog.vmem_bytes(xs) <= vmem_budget:
                 return LaunchPlan(program=prog, streamed=False, x_slots=xs)
@@ -638,7 +681,7 @@ def plan_launch(
         # double buffering over the blocking single slot, and within a
         # weight regime the pipelined input buffer
         for r in regions:
-            prog = compile_program(spec, r)
+            prog = compile_program(spec, r, compute_dtype=compute_dtype)
             for xs in x_options(prog):
                 if prog.vmem_stream_bytes(2, xs) <= vmem_budget:
                     return LaunchPlan(
@@ -664,6 +707,7 @@ def pick_out_region(
     vmem_budget: int = VMEM_BUDGET_BYTES,
     *,
     allow_stream: bool = True,
+    compute_dtype="float32",
 ) -> int | None:
     """Largest output region that tiles the output exactly and whose program
     fits the VMEM budget — the TPU analogue of the paper's ``H <= IFM``
@@ -674,5 +718,8 @@ def pick_out_region(
     considered.  Returns ``None`` when nothing fits (the chain must then be
     chunked).
     """
-    plan = plan_launch(spec, vmem_budget, allow_stream=allow_stream)
+    plan = plan_launch(
+        spec, vmem_budget, allow_stream=allow_stream,
+        compute_dtype=compute_dtype,
+    )
     return None if plan is None else plan.out_region

@@ -80,11 +80,18 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import resolve_interpret
+from repro.core.dtypes import EXEC_DTYPES, jnp_dtype
 from repro.core.program import ConvLevelProg, TileProgram  # noqa: F401 (re-export)
 
 
 def _conv_tile(x, w, b, K: int, S: int, out: int):
-    """Valid conv on a (h, w, Cin) tile via K*K strided-slice MXU dots."""
+    """Valid conv on a (h, w, Cin) tile via K*K strided-slice MXU dots.
+
+    Operands may be any compute dtype (f32 or bf16); the accumulator is
+    always float32 via ``preferred_element_type`` — DESIGN.md §11's
+    "low-precision operands, full-precision accumulation" contract, the MXU's
+    native mixed-precision mode.  The bias add also runs in f32 (the f32
+    accumulator promotes a bf16 ``b``)."""
     cin, cout = w.shape[2], w.shape[3]
     acc = jnp.zeros((out * out, cout), jnp.float32)
     hi = (out - 1) * S + 1
@@ -130,12 +137,18 @@ def _level_epilogue(t, idx, prog: ConvLevelProg):
     return t
 
 
-def _const_level(idx, prog: ConvLevelProg, b, relu: bool):
+def _const_level(idx, prog: ConvLevelProg, b, relu: bool, out_dtype):
     """Closed form of a level whose input tile is all zero: the conv output
-    is the bias everywhere, so the tile is ``epilogue(relu(b))``."""
+    is the bias everywhere, so the tile is ``epilogue(relu(b))``.
+
+    Bit-identical to the live path at every compute dtype: the live path
+    accumulates ``0 + b`` in f32 then casts after the epilogue, and relu /
+    validity masks / maxpool all commute exactly with the f32->bf16
+    round-trip of a bf16-representable ``b`` (monotone or multiply-by-{0,1}
+    ops on exactly-representable values)."""
     c = jnp.maximum(b, 0.0) if relu else b
     t = jnp.broadcast_to(c, (prog.out_size, prog.out_size, c.shape[-1]))
-    return _level_epilogue(t, idx, prog)
+    return _level_epilogue(t, idx, prog).astype(out_dtype)
 
 
 def _pyramid_kernel(
@@ -150,6 +163,7 @@ def _pyramid_kernel(
     w_slots: int,
     x_slots: int,
     cnts: tuple[int, ...],
+    out_dtype,
 ):
     q = len(progs)
     x_hbm = refs[0]
@@ -264,7 +278,10 @@ def _pyramid_kernel(
             tl = _conv_tile(t_in, w, b, prog.K, prog.S, prog.out_size)
             if relu:
                 tl = jnp.maximum(tl, 0.0)
-            return _level_epilogue(tl, idx, prog)
+            # relu/mask/pool run in the f32 accumulator dtype; the cast to
+            # the compute dtype happens once, after the epilogue, so every
+            # inter-level tile (VMEM and HBM alike) is compute-dtype wide
+            return _level_epilogue(tl, idx, prog).astype(out_dtype)
 
         if statically_live:
             # level 0 always computes; without ReLU the all-zero test is not
@@ -291,7 +308,7 @@ def _pyramid_kernel(
                         @pl.when(prev_live)
                         def _():
                             w_dma(l).wait()
-                return _const_level(idx, prog, b, relu)
+                return _const_level(idx, prog, b, relu, out_dtype)
 
             t = jax.lax.cond(live, run_level, skip_level, t)
 
@@ -312,6 +329,7 @@ def _ktiled_kernel(
     x_slots: int,
     c_tiles: int,
     cnts: tuple[int, ...],
+    out_dtype,
 ):
     """Channel-tiled variant over the (B, alpha, alpha, c_tiles) grid.
 
@@ -441,7 +459,9 @@ def _ktiled_kernel(
                 tl = _conv_tile(t_in, w, b, prog.K, prog.S, prog.out_size)
                 if relu:
                     tl = jnp.maximum(tl, 0.0)
-                return _level_epilogue(tl, idx, prog)
+                # cast after the epilogue, exactly as the untiled kernel, so
+                # mid_scratch (and hence every k's input) is compute dtype
+                return _level_epilogue(tl, idx, prog).astype(out_dtype)
 
             if l == 0 or not (end_skip and relu):
                 skips.append(jnp.int32(0))
@@ -453,7 +473,7 @@ def _ktiled_kernel(
                     live,
                     run_level,
                     lambda t_in, b=b, prog=prog: _const_level(
-                        idx, prog, b, relu
+                        idx, prog, b, relu, out_dtype
                     ),
                     t,
                 )
@@ -483,7 +503,7 @@ def _ktiled_kernel(
         tl = _conv_tile(t_mid, w_k, bk, last.K, last.S, last.out_size)
         if relu:
             tl = jnp.maximum(tl, 0.0)
-        return _level_epilogue(tl, idx, last)
+        return _level_epilogue(tl, idx, last).astype(out_dtype)
 
     if q == 1 or not (end_skip and relu):
         last_flag = jnp.int32(0)
@@ -494,7 +514,7 @@ def _ktiled_kernel(
         res = jax.lax.cond(
             live,
             run_last,
-            lambda t_mid: _const_level(idx, last, bk, relu),
+            lambda t_mid: _const_level(idx, last, bk, relu, out_dtype),
             t_in,
         )
 
@@ -556,12 +576,36 @@ def fused_pyramid_pallas(
     ``c_tiles`` must divide the last level's ``Cout``; output and skip
     shapes are unchanged, and the result is bit-identical to ``c_tiles=1``.
 
+    All operands must arrive in ``program.compute_dtype`` (DESIGN.md §11):
+    halo tiles, weight slices, inter-level tiles, and the output all move at
+    that width — matching the byte model byte for byte — while every conv
+    accumulates in f32 (``preferred_element_type``) and casts once after the
+    level epilogue.  The int32 skip map is dtype-invariant.
+
     Returns ``(out, skip)`` with ``skip`` shaped ``(B, alpha, alpha, Q)`` —
     ``skip[..., l] == 1`` where level ``l``'s conv was short-circuited by the
     END cascade (level 0 never skips).
     """
     B = x_padded.shape[0]
     q = program.q_convs
+    if program.compute_dtype not in EXEC_DTYPES:
+        raise NotImplementedError(
+            f"compute dtype {program.compute_dtype!r} is modeled but not"
+            f" executable; the kernels run {EXEC_DTYPES}"
+        )
+    cdt = jnp_dtype(program.compute_dtype)
+    assert x_padded.dtype == cdt, (
+        f"x_padded dtype {x_padded.dtype} != program compute dtype {cdt}"
+    )
+    assert all(b.dtype == cdt for b in biases), (
+        f"bias dtypes must match the program compute dtype {cdt}"
+    )
+    assert weights is None or all(w.dtype == cdt for w in weights), (
+        f"weight dtypes must match the program compute dtype {cdt}"
+    )
+    assert weights_flat is None or weights_flat.dtype == cdt, (
+        f"weights_flat dtype {weights_flat.dtype} != compute dtype {cdt}"
+    )
     assert x_slots in (1, 2), "x_slots: 1 (serial) or 2 (revolving pipeline)"
     assert len(biases) == q, "one bias per conv level"
     if not stream_weights and weights_flat is not None:
@@ -622,11 +666,12 @@ def fused_pyramid_pallas(
         w_slots=w_slots,
         x_slots=x_slots,
         cnts=program.level_weight_counts(),
+        out_dtype=cdt,
     )
     in_specs = [pl.BlockSpec(memory_space=pltpu.ANY)]
     operands: list[jnp.ndarray] = [x_padded]
     scratch_shapes: list = [
-        pltpu.VMEM((x_slots, program.tile0, program.tile0, c0), jnp.float32),
+        pltpu.VMEM((x_slots, program.tile0, program.tile0, c0), cdt),
         pltpu.SemaphoreType.DMA((x_slots,)),
     ]
     if stream_weights:
@@ -638,9 +683,7 @@ def fused_pyramid_pallas(
             in_specs.append(pl.BlockSpec(bias.shape, lambda b, i, j: (0,)))
             operands.append(bias)
         scratch_shapes += [
-            pltpu.VMEM(
-                (w_slots, max(program.level_weight_counts())), jnp.float32
-            ),
+            pltpu.VMEM((w_slots, max(program.level_weight_counts())), cdt),
             pltpu.SemaphoreType.DMA((w_slots,)),
         ]
     else:
@@ -660,7 +703,7 @@ def fused_pyramid_pallas(
         ],
         out_shape=[
             jax.ShapeDtypeStruct(
-                (B, alpha * out_region, alpha * out_region, m_out), jnp.float32
+                (B, alpha * out_region, alpha * out_region, m_out), cdt
             ),
             jax.ShapeDtypeStruct((B, alpha, alpha, q), jnp.int32),
         ],
@@ -708,6 +751,7 @@ def _launch_ktiled(
     c0 = program.levels[0].n_in
     alpha, out_region = program.alpha, program.out_region
     m_out = program.n_out
+    cdt = jnp_dtype(program.compute_dtype)
     kernel = functools.partial(
         _ktiled_kernel,
         progs=program.levels,
@@ -721,16 +765,17 @@ def _launch_ktiled(
         x_slots=x_slots,
         c_tiles=c_tiles,
         cnts=cnts,
+        out_dtype=cdt,
     )
     in_specs = [pl.BlockSpec(memory_space=pltpu.ANY)]
     operands: list[jnp.ndarray] = [x_padded]
     scratch_shapes: list = [
-        pltpu.VMEM((x_slots, program.tile0, program.tile0, c0), jnp.float32),
+        pltpu.VMEM((x_slots, program.tile0, program.tile0, c0), cdt),
         pltpu.SemaphoreType.DMA((x_slots,)),
     ]
     if q > 1:
         scratch_shapes.append(
-            pltpu.VMEM((last.in_size, last.in_size, last.n_in), jnp.float32)
+            pltpu.VMEM((last.in_size, last.in_size, last.n_in), cdt)
         )
     if stream_weights:
         if weights_flat is None:
@@ -751,13 +796,11 @@ def _launch_ktiled(
             operands.append(bias)
         if q > 1:
             scratch_shapes += [
-                pltpu.VMEM((1, max(cnts[:-1])), jnp.float32),
+                pltpu.VMEM((1, max(cnts[:-1])), cdt),
                 pltpu.SemaphoreType.DMA(()),
             ]
         scratch_shapes += [
-            pltpu.VMEM(
-                (w_slots, last.K, last.K, last.n_in, ct_out), jnp.float32
-            ),
+            pltpu.VMEM((w_slots, last.K, last.K, last.n_in, ct_out), cdt),
             pltpu.SemaphoreType.DMA((w_slots,)),
         ]
     else:
@@ -780,7 +823,7 @@ def _launch_ktiled(
         ],
         out_shape=[
             jax.ShapeDtypeStruct(
-                (B, alpha * out_region, alpha * out_region, m_out), jnp.float32
+                (B, alpha * out_region, alpha * out_region, m_out), cdt
             ),
             jax.ShapeDtypeStruct((B, alpha, alpha, q), jnp.int32),
         ],

@@ -24,6 +24,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core.dtypes import canonical_dtype, jnp_dtype
 from repro.core.fusion import FusionSpec
 from repro.core.program import (
     VMEM_BUDGET_BYTES,
@@ -34,20 +35,21 @@ from repro.core.program import (
 from .fused_conv import fused_pyramid_pallas
 
 
-def flatten_weights(weights: list) -> jnp.ndarray:
-    """Concatenate per-level weight tensors into the flat float32 array the
-    streamed-weight kernel DMAs from.  Plan-driven callers (the network
-    runner) call this once per model instead of once per launch."""
-    return jnp.concatenate(
-        [jnp.asarray(w, jnp.float32).reshape(-1) for w in weights]
-    )
+def flatten_weights(weights: list, dtype="float32") -> jnp.ndarray:
+    """Concatenate per-level weight tensors into the flat compute-dtype
+    array the streamed-weight kernel DMAs from.  Plan-driven callers (the
+    network runner) call this once per model instead of once per launch;
+    ``dtype`` must match the launch's compute dtype so each streamed byte is
+    exactly as wide as the byte model charges."""
+    dt = jnp_dtype(dtype)
+    return jnp.concatenate([jnp.asarray(w, dt).reshape(-1) for w in weights])
 
 
 @partial(
     jax.jit,
     static_argnames=(
         "spec", "out_region", "streamed", "w_slots", "x_slots", "c_tiles",
-        "relu", "end_skip", "interpret", "vmem_budget",
+        "relu", "end_skip", "interpret", "vmem_budget", "compute_dtype",
     ),
 )
 def fused_pyramid(
@@ -66,6 +68,7 @@ def fused_pyramid(
     interpret: bool | None = None,
     vmem_budget: int = VMEM_BUDGET_BYTES,
     weights_flat: jnp.ndarray | None = None,
+    compute_dtype: str = "float32",
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Fused Q-conv pyramid forward as a single kernel launch.
 
@@ -85,12 +88,23 @@ def fused_pyramid(
     optionally supplies the pre-flattened streamed weights
     (:func:`flatten_weights`) to keep the concatenation out of the per-call
     path — streamed callers holding only the flat form may pass
-    ``weights=None``.  ``interpret=None`` resolves to compiled on TPU,
-    interpreted on CPU/GPU.  Returns ``(out, skip)`` with ``skip``:
-    (B, alpha, alpha, Q) int32 END-cascade flags (level 0 never skips).
+    ``weights=None`` (its dtype must match ``compute_dtype``).
+    ``compute_dtype`` (name string or jnp dtype; static) selects the value
+    width of every tile/weight moved by the launch — activations and weights
+    are cast on entry, accumulation stays f32 inside the kernel (DESIGN.md
+    §11) — and re-tiers the regime ladder, since halved bytes let plans that
+    streamed at f32 go resident or double-buffered at bf16.
+    ``interpret=None`` resolves to compiled on TPU, interpreted on CPU/GPU.
+    Returns ``(out, skip)`` with ``skip``: (B, alpha, alpha, Q) int32
+    END-cascade flags (level 0 never skips, and skip flags are
+    dtype-invariant).
     """
+    compute_dtype = canonical_dtype(compute_dtype)
+    cdt = jnp_dtype(compute_dtype)
     if out_region is None:
-        lp = plan_launch(spec, vmem_budget=vmem_budget)
+        lp = plan_launch(
+            spec, vmem_budget=vmem_budget, compute_dtype=compute_dtype
+        )
         assert lp is not None, (
             "no output region fits VMEM; chunk via fused_pyramid_chain"
         )
@@ -103,7 +117,7 @@ def fused_pyramid(
                     c_tiles = lp.c_tiles
         if x_slots is None:
             x_slots = lp.x_slots
-    prog = compile_program(spec, out_region)
+    prog = compile_program(spec, out_region, compute_dtype=compute_dtype)
     # a caller-pinned x_slots=2 charges the extra landing slot to every
     # regime, including the resident-vs-streamed decision itself
     xs_pinned = x_slots if x_slots is not None else 1
@@ -147,14 +161,13 @@ def fused_pyramid(
         + " chunk via fused_pyramid_chain"
     )
     xp = jnp.pad(
-        x.astype(jnp.float32),
+        x.astype(cdt),
         ((0, 0), (prog.pad_lo, prog.pad_hi), (prog.pad_lo, prog.pad_hi), (0, 0)),
     )
     return fused_pyramid_pallas(
         xp,
-        None if weights is None
-        else [w.astype(jnp.float32) for w in weights],
-        [b.astype(jnp.float32) for b in biases],
+        None if weights is None else [w.astype(cdt) for w in weights],
+        [b.astype(cdt) for b in biases],
         program=prog,
         relu=relu,
         end_skip=end_skip,
@@ -219,15 +232,17 @@ def plan_chunks(
     *,
     vmem_budget: int = VMEM_BUDGET_BYTES,
     max_convs_per_chunk: int | None = None,
+    compute_dtype: str = "float32",
 ) -> list[FusionSpec]:
     """Greedy chunking: grow each chunk conv-group by conv-group until the
     VMEM budget (or an explicit conv cap) forces a split.
 
     A chain that fits the budget returns a single chunk — one kernel launch,
     no intermediate HBM round-trip.  Odd conv counts are fine: a remainder
-    simply becomes a final Q=1/Q=3 chunk.  Raises ``ValueError`` when even a
-    lone conv group cannot fit the budget (chunking cannot help: a group is
-    the indivisible launch unit).
+    simply becomes a final Q=1/Q=3 chunk.  Feasibility is dtype-aware: a
+    bf16 chain's halved working set can merge chunks an f32 chain must
+    split.  Raises ``ValueError`` when even a lone conv group cannot fit the
+    budget (chunking cannot help: a group is the indivisible launch unit).
     """
     groups = conv_groups(spec)
     chunks: list[FusionSpec] = []
@@ -235,7 +250,12 @@ def plan_chunks(
 
     def fits(levels: list) -> bool:
         sub = FusionSpec(levels=tuple(levels), input_size=size)
-        return pick_out_region(sub, vmem_budget=vmem_budget) is not None
+        return (
+            pick_out_region(
+                sub, vmem_budget=vmem_budget, compute_dtype=compute_dtype
+            )
+            is not None
+        )
 
     cur: list = []
     for g in groups:
@@ -269,6 +289,7 @@ def fused_pyramid_chain(
     interpret: bool | None = None,
     vmem_budget: int = VMEM_BUDGET_BYTES,
     max_convs_per_chunk: int | None = None,
+    compute_dtype: str = "float32",
 ):
     """Execute a fusion chain in as few kernel launches as VMEM allows.
 
@@ -283,7 +304,10 @@ def fused_pyramid_chain(
     Q_c) END-cascade flag map.
     """
     chunks = plan_chunks(
-        spec, vmem_budget=vmem_budget, max_convs_per_chunk=max_convs_per_chunk
+        spec,
+        vmem_budget=vmem_budget,
+        max_convs_per_chunk=max_convs_per_chunk,
+        compute_dtype=compute_dtype,
     )
     if out_regions is not None:
         assert len(out_regions) == len(chunks), (
@@ -304,6 +328,7 @@ def fused_pyramid_chain(
             end_skip=end_skip,
             interpret=interpret,
             vmem_budget=vmem_budget,
+            compute_dtype=compute_dtype,
         )
         skips.append(skip)
         wi += q

@@ -21,7 +21,13 @@ from .partition import (
     layerwise_partition,
     paper_partition,
 )
-from .runner import init_network_params, reference_network, run_network
+from .runner import (
+    bf16_logit_tol,
+    init_network_params,
+    prepare_network_params,
+    reference_network,
+    run_network,
+)
 
 __all__ = [
     "MODELS",
@@ -30,11 +36,13 @@ __all__ = [
     "PartitionPlan",
     "PyramidPlan",
     "auto_partition",
+    "bf16_logit_tol",
     "fusable_segments",
     "infer_shapes",
     "init_network_params",
     "layerwise_partition",
     "paper_partition",
+    "prepare_network_params",
     "reference_network",
     "run_network",
 ]

@@ -31,6 +31,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, replace
 
+from repro.core.dtypes import canonical_dtype
 from repro.core.fusion import FusedLevel, FusionSpec
 
 _OPS = ("input", "conv", "pool", "relu", "add", "global_pool", "flatten", "dense")
@@ -72,16 +73,25 @@ class Graph:
     ``nodes[0]`` must be the single ``input`` node; ``nodes[-1]`` is the
     network output (the logits for the zoo models).  Hashable — usable as a
     jit static argument.
+
+    ``compute_dtype`` (canonical name string, DESIGN.md §11) is the value
+    width the network's tiles and weights move at — the default the
+    partitioner and runner inherit when no explicit dtype override is given.
+    Accumulation is always f32 regardless.
     """
 
     name: str
     input_size: int
     in_channels: int
     nodes: tuple[Node, ...]
+    compute_dtype: str = "float32"
 
     def __post_init__(self) -> None:
         if not self.nodes or self.nodes[0].op != "input":
             raise ValueError(f"graph {self.name}: nodes[0] must be the input node")
+        object.__setattr__(
+            self, "compute_dtype", canonical_dtype(self.compute_dtype)
+        )
         infer_shapes(self)  # raises on any structural error
 
     def node(self, name: str) -> Node:
@@ -295,11 +305,14 @@ class _Builder:
             Node(op, name, srcs or (self.tail,), n_out=n_out, relu=relu)
         )
 
-    def graph(self, name, input_size, in_channels) -> Graph:
-        return Graph(name, input_size, in_channels, tuple(self.nodes))
+    def graph(self, name, input_size, in_channels,
+              compute_dtype="float32") -> Graph:
+        return Graph(name, input_size, in_channels, tuple(self.nodes),
+                     compute_dtype)
 
 
-def lenet5(input_size: int = 32, num_classes: int = 10) -> Graph:
+def lenet5(input_size: int = 32, num_classes: int = 10, *,
+           compute_dtype: str = "float32") -> Graph:
     """LeNet-5 (paper §3.3.1): two conv+pool stages, three dense layers."""
     b = _Builder()
     b.conv("CL1", 5, 1, 0, 6)
@@ -310,10 +323,11 @@ def lenet5(input_size: int = 32, num_classes: int = 10) -> Graph:
     b.op("dense", "FC1", n_out=120)
     b.op("dense", "FC2", n_out=84)
     b.op("dense", "FC3", n_out=num_classes, relu=False)
-    return b.graph("lenet", input_size, 1)
+    return b.graph("lenet", input_size, 1, compute_dtype)
 
 
-def alexnet(input_size: int = 227, num_classes: int = 1000) -> Graph:
+def alexnet(input_size: int = 227, num_classes: int = 1000, *,
+            compute_dtype: str = "float32") -> Graph:
     """AlexNet conv stack (no LRN) + the three dense layers."""
     b = _Builder()
     b.conv("CONV1", 11, 4, 0, 96)
@@ -328,13 +342,14 @@ def alexnet(input_size: int = 227, num_classes: int = 1000) -> Graph:
     b.op("dense", "FC6", n_out=4096)
     b.op("dense", "FC7", n_out=4096)
     b.op("dense", "FC8", n_out=num_classes, relu=False)
-    return b.graph("alexnet", input_size, 3)
+    return b.graph("alexnet", input_size, 3, compute_dtype)
 
 
 _VGG16_PLAN = ((2, 64), (2, 128), (3, 256), (3, 512), (3, 512))
 
 
-def vgg16(input_size: int = 224, num_classes: int = 1000) -> Graph:
+def vgg16(input_size: int = 224, num_classes: int = 1000, *,
+          compute_dtype: str = "float32") -> Graph:
     """VGG-16: five conv blocks with trailing 2x2 pools, three dense layers."""
     b = _Builder()
     ci = 0
@@ -347,7 +362,7 @@ def vgg16(input_size: int = 224, num_classes: int = 1000) -> Graph:
     b.op("dense", "FC1", n_out=4096)
     b.op("dense", "FC2", n_out=4096)
     b.op("dense", "FC3", n_out=num_classes, relu=False)
-    return b.graph("vgg16", input_size, 3)
+    return b.graph("vgg16", input_size, 3, compute_dtype)
 
 
 # (n_out, stride of convA) per residual block
@@ -355,7 +370,8 @@ _RESNET18_PLAN = ((64, 1), (64, 1), (128, 2), (128, 1), (256, 2), (256, 1),
                   (512, 2), (512, 1))
 
 
-def resnet18(input_size: int = 224, num_classes: int = 1000) -> Graph:
+def resnet18(input_size: int = 224, num_classes: int = 1000, *,
+             compute_dtype: str = "float32") -> Graph:
     """ResNet-18: 7x7/2 stem + 3x3/2 maxpool, eight 2-conv residual blocks
     (1x1 projection shortcuts at the stride-2 / channel-change blocks),
     global average pool and the classifier.
@@ -384,7 +400,7 @@ def resnet18(input_size: int = 224, num_classes: int = 1000) -> Graph:
         c_in = ch
     b.op("global_pool", "gap")
     b.op("dense", "FC", n_out=num_classes, relu=False)
-    return b.graph("resnet18", input_size, 3)
+    return b.graph("resnet18", input_size, 3, compute_dtype)
 
 
 MODELS = {

@@ -33,6 +33,7 @@ import functools
 import itertools
 from dataclasses import dataclass
 
+from repro.core.dtypes import canonical_dtype
 from repro.core.fusion import FusionSpec
 from repro.core.program import VMEM_BUDGET_BYTES, LaunchPlan, plan_launch
 from repro.kernels.fused_conv.ops import conv_groups
@@ -76,6 +77,9 @@ class PartitionPlan:
     pyramids: tuple[PyramidPlan, ...]
     vmem_budget: int
     batch: int
+    # the compute dtype every pyramid was planned (and will launch) at; the
+    # runner casts params/activations to match (DESIGN.md §11)
+    compute_dtype: str = "float32"
 
     def pyramid_at(self, node_name: str) -> PyramidPlan | None:
         for p in self.pyramids:
@@ -107,6 +111,7 @@ class PartitionPlan:
         ]
         return (
             f"PartitionPlan[{self.graph.name}] batch={self.batch} "
+            f"dtype={self.compute_dtype} "
             f"launches={self.n_launches()} hbm={self.hbm_bytes():,}B\n"
             + "\n".join(rows)
         )
@@ -135,11 +140,15 @@ def _group_specs(segment: Segment) -> tuple[list[list], list[int], list[int]]:
 def _span_launch(
     groups: list[list], bound_sizes: list[int], i: int, j: int,
     vmem_budget: int, prefer_region: str = "largest",
+    compute_dtype: str = "float32",
 ) -> LaunchPlan | None:
     """Launch plan (or None) for one pyramid covering groups [i, j)."""
     levels = tuple(itertools.chain.from_iterable(groups[i:j]))
     spec = FusionSpec(levels=levels, input_size=bound_sizes[i])
-    return plan_launch(spec, vmem_budget=vmem_budget, prefer_region=prefer_region)
+    return plan_launch(
+        spec, vmem_budget=vmem_budget, prefer_region=prefer_region,
+        compute_dtype=compute_dtype,
+    )
 
 
 def partition_segment(
@@ -149,9 +158,14 @@ def partition_segment(
     batch: int = 1,
     max_convs: int | None = None,
     prefer_region: str = "largest",
+    compute_dtype: str = "float32",
 ) -> list[LaunchPlan]:
     """Optimal cuts of one segment: DP over conv-group boundaries minimizing
     (sum HBM bytes, sum modeled cycles) lexicographically.
+
+    The DP is dtype-aware end to end: each candidate span is costed (and its
+    regime laddered) at ``compute_dtype``, so bf16's halved bytes can both
+    move cut points and flip regimes relative to the f32 plan.
 
     ``max_convs`` caps pyramid depth (1 = the layer-by-layer baseline).
     Raises ``ValueError`` when some single conv group fits no launch regime
@@ -168,7 +182,7 @@ def partition_segment(
                 cost[(i, j)] = INFEASIBLE
                 continue
             lp = _span_launch(groups, bound_sizes, i, j, vmem_budget,
-                              prefer_region)
+                              prefer_region, compute_dtype)
             if lp is None:
                 cost[(i, j)] = INFEASIBLE
                 continue
@@ -208,6 +222,7 @@ def brute_force_segment(
     *,
     vmem_budget: int = VMEM_BUDGET_BYTES,
     batch: int = 1,
+    compute_dtype: str = "float32",
 ) -> tuple[float, float]:
     """Exhaustive minimum over all 2^(G-1) cut sets — the DP's test oracle."""
     groups, bound_sizes, _ = _group_specs(segment)
@@ -217,7 +232,8 @@ def brute_force_segment(
         bounds = [0] + [k + 1 for k in range(n - 1) if mask >> k & 1] + [n]
         hbm = cyc = 0.0
         for i, j in zip(bounds, bounds[1:]):
-            lp = _span_launch(groups, bound_sizes, i, j, vmem_budget)
+            lp = _span_launch(groups, bound_sizes, i, j, vmem_budget,
+                              compute_dtype=compute_dtype)
             if lp is None:
                 break
             hbm += lp.hbm_bytes(batch)
@@ -253,17 +269,18 @@ def _auto_partition_cached(
     batch: int,
     max_convs: int | None,
     prefer_region: str,
+    compute_dtype: str,
 ) -> PartitionPlan:
     pyramids: list[PyramidPlan] = []
     for seg in fusable_segments(graph):
         launches = partition_segment(
             seg, vmem_budget=vmem_budget, batch=batch, max_convs=max_convs,
-            prefer_region=prefer_region,
+            prefer_region=prefer_region, compute_dtype=compute_dtype,
         )
         pyramids.extend(_segment_pyramids(seg, launches))
     return PartitionPlan(
         graph=graph, pyramids=tuple(pyramids), vmem_budget=vmem_budget,
-        batch=batch,
+        batch=batch, compute_dtype=compute_dtype,
     )
 
 
@@ -274,19 +291,27 @@ def auto_partition(
     batch: int = 1,
     max_convs: int | None = None,
     prefer_region: str = "largest",
+    compute_dtype: str | None = None,
 ) -> PartitionPlan:
     """Machine-chosen fusion boundaries for the whole network.
     ``prefer_region="smallest"`` trades grid overhead for maximal tile grids
     (finest END-skip granularity) — the paper's smallest-tile preference.
+    ``compute_dtype`` overrides the graph's default value width
+    (``None`` = ``graph.compute_dtype``); the f32 and bf16 plans for the
+    same graph are distinct cache entries.
 
     Memoized on (graph structure, VMEM budget, batch, depth cap, region
-    preference): the DP is pure over static shapes, and ``run_model`` /
-    the benchmark loop re-request identical plans every call — they now hit
-    the cache and reuse the same :class:`PartitionPlan` object (which also
-    keeps its jit static-argument identity stable).  Inspect or reset via
-    :func:`partition_cache_info` / :func:`clear_partition_cache`."""
+    preference, compute dtype): the DP is pure over static shapes, and
+    ``run_model`` / the benchmark loop re-request identical plans every call
+    — they now hit the cache and reuse the same :class:`PartitionPlan`
+    object (which also keeps its jit static-argument identity stable).
+    Inspect or reset via :func:`partition_cache_info` /
+    :func:`clear_partition_cache`."""
+    cdt = canonical_dtype(
+        graph.compute_dtype if compute_dtype is None else compute_dtype
+    )
     return _auto_partition_cached(
-        graph, vmem_budget, batch, max_convs, prefer_region
+        graph, vmem_budget, batch, max_convs, prefer_region, cdt
     )
 
 
@@ -300,14 +325,18 @@ def clear_partition_cache() -> None:
     _auto_partition_cached.cache_clear()
 
 
-def min_vmem_budget(graph: Graph) -> int:
+def min_vmem_budget(graph: Graph, *, compute_dtype: str | None = None) -> int:
     """Smallest VMEM budget under which every conv group of the graph still
-    has some launch regime — the floor below which no partition exists.
+    has some launch regime — the floor below which no partition exists
+    (dtype-aware: a bf16 graph's floor is roughly half the f32 one).
     Partitioning under this budget forces minimal output regions (maximal
     tile grids), which is also how the example script provokes the END
     cascade at reduced scale."""
     from repro.core.program import compile_program
 
+    cdt = canonical_dtype(
+        graph.compute_dtype if compute_dtype is None else compute_dtype
+    )
     worst = 0
     for seg in fusable_segments(graph):
         groups, bound_sizes, _ = _group_specs(seg)
@@ -329,7 +358,7 @@ def min_vmem_budget(graph: Graph) -> int:
                 return min(prog.vmem_bytes(), prog.vmem_stream_bytes(), tiled)
 
             cheapest = min(
-                _cheapest_regime(compile_program(spec, r))
+                _cheapest_regime(compile_program(spec, r, compute_dtype=cdt))
                 for r in range(1, out_size + 1)
                 if out_size % r == 0
             )
@@ -338,12 +367,14 @@ def min_vmem_budget(graph: Graph) -> int:
 
 
 def layerwise_partition(
-    graph: Graph, *, vmem_budget: int = VMEM_BUDGET_BYTES, batch: int = 1
+    graph: Graph, *, vmem_budget: int = VMEM_BUDGET_BYTES, batch: int = 1,
+    compute_dtype: str | None = None,
 ) -> PartitionPlan:
     """The unfused baseline: every conv group is its own launch, every
     intermediate map round-trips HBM."""
     return auto_partition(
-        graph, vmem_budget=vmem_budget, batch=batch, max_convs=1
+        graph, vmem_budget=vmem_budget, batch=batch, max_convs=1,
+        compute_dtype=compute_dtype,
     )
 
 
@@ -353,13 +384,17 @@ _PAPER_HEAD_CONVS = {"lenet": 2, "alexnet": 2, "vgg16": 4}
 
 
 def paper_partition(
-    graph: Graph, *, vmem_budget: int = VMEM_BUDGET_BYTES, batch: int = 1
+    graph: Graph, *, vmem_budget: int = VMEM_BUDGET_BYTES, batch: int = 1,
+    compute_dtype: str | None = None,
 ) -> PartitionPlan:
     """The paper's hand-picked fusion choices, expressed as a partition:
     the leading segment fuses the quoted conv count and leaves the rest
     layer-by-layer; ResNet-18 fuses each residual block's conv pair (§4.3),
     which is exactly per-segment maximal fusion — shortcuts and the stem stay
     single launches."""
+    cdt = canonical_dtype(
+        graph.compute_dtype if compute_dtype is None else compute_dtype
+    )
     pyramids: list[PyramidPlan] = []
     head_convs = _PAPER_HEAD_CONVS.get(graph.name)
     for si, seg in enumerate(fusable_segments(graph)):
@@ -378,7 +413,8 @@ def paper_partition(
             spans = [(k, k + 1) for k in range(len(groups))]
         launches = []
         for i, j in spans:
-            lp = _span_launch(groups, bound_sizes, i, j, vmem_budget)
+            lp = _span_launch(groups, bound_sizes, i, j, vmem_budget,
+                              compute_dtype=cdt)
             if lp is None:
                 raise ValueError(
                     f"paper fusion group {i}:{j} of segment {si} does not fit"
@@ -388,5 +424,5 @@ def paper_partition(
         pyramids.extend(_segment_pyramids(seg, launches))
     return PartitionPlan(
         graph=graph, pyramids=tuple(pyramids), vmem_budget=vmem_budget,
-        batch=batch,
+        batch=batch, compute_dtype=cdt,
     )

@@ -14,6 +14,14 @@ node-by-node with full intermediate feature maps via
 match it bit-close (float32 ``atol 1e-4`` end-to-end; enforced in
 ``tests/test_network_runner.py``) — that contract is what makes the
 auto-partitioner free to move fusion boundaries without changing results.
+
+Low precision (DESIGN.md §11): ``run_network(..., dtype="bfloat16")`` (or a
+bf16-planned partition) moves every activation tile, weight, and dense
+operand at bf16 while *all* accumulation — conv MXU passes, dense matmuls,
+the global-average-pool mean — runs in f32 via ``preferred_element_type``.
+End-to-end logits then differ from the f32 reference only by operand
+rounding, bounded by :func:`bf16_logit_tol` across the zoo (enforced in
+``tests/test_precision.py`` and the CI smoke job).
 """
 
 from __future__ import annotations
@@ -24,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.dtypes import canonical_dtype, jnp_dtype
 from repro.kernels.fused_conv.ops import flatten_weights, fused_pyramid
 
 from .graph import Graph, Node, infer_shapes
@@ -33,6 +42,27 @@ Params = dict[str, tuple[jnp.ndarray, jnp.ndarray]]
 
 # key prefix of pre-flattened streamed-weight arrays in a params dict
 _FLAT = "_flat/"
+
+# Documented end-to-end bf16 logit tolerance vs the f32 reference.  bf16
+# keeps f32's exponent range but only 8 mantissa bits: each layer's
+# operands round to ~2^-9 relative error while accumulation stays exact in
+# f32, so the end-to-end error is *relative* to logit magnitude — measured
+# ~0.5-0.7% across the He-initialized zoo (ResNet-18's logits reach O(100),
+# LeNet's O(1); their absolute errors differ 10x, their relative errors
+# don't).  The contract is ``max-abs-err <= ATOL + RTOL * max|logit|``:
+# RTOL at ~3x the measured worst case, ATOL as a floor for near-zero
+# logits.  A precision bug (double rounding, a bf16 accumulator) breaks
+# this by an order of magnitude.  Use :func:`bf16_logit_tol`.
+BF16_LOGIT_ATOL = 0.05
+BF16_LOGIT_RTOL = 0.02
+
+
+def bf16_logit_tol(reference) -> float:
+    """The documented bf16-vs-f32 max-abs-err bound for a given f32
+    reference logit tensor (see :data:`BF16_LOGIT_RTOL`)."""
+    return BF16_LOGIT_ATOL + BF16_LOGIT_RTOL * float(
+        jnp.max(jnp.abs(reference))
+    )
 
 
 def init_network_params(graph: Graph, key: jax.Array, scale: float = 1.0) -> Params:
@@ -54,12 +84,17 @@ def init_network_params(graph: Graph, key: jax.Array, scale: float = 1.0) -> Par
 
 
 def _conv_node(x, n: Node, w, b):
+    # f32 accumulation at any operand dtype, cast back to the network's
+    # compute dtype — the plain-op mirror of the kernel's §11 contract
+    # (identity for f32 inputs, so the reference oracle is unchanged)
     out = jax.lax.conv_general_dilated(
         x, w, window_strides=(n.S, n.S),
         padding=[(n.pad, n.pad), (n.pad, n.pad)],
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32,
     ) + b
-    return jax.nn.relu(out) if n.relu else out
+    out = jax.nn.relu(out) if n.relu else out
+    return out.astype(x.dtype)
 
 
 def _pool_node(x, n: Node):
@@ -77,14 +112,22 @@ def _head_op(values, n: Node, params: Params):
     if n.op == "add":
         return values[n.inputs[0]] + values[n.inputs[1]]
     if n.op == "global_pool":
-        return jnp.mean(values[n.inputs[0]], axis=(1, 2))
+        # mean in f32: a bf16 running sum over H*W terms would lose low
+        # bits of every partial; cast back to the network dtype once
+        x = values[n.inputs[0]]
+        return jnp.mean(x.astype(jnp.float32), axis=(1, 2)).astype(x.dtype)
     if n.op == "flatten":
         x = values[n.inputs[0]]
         return x.reshape(x.shape[0], -1)
     if n.op == "dense":
+        x = values[n.inputs[0]]
         w, b = params[n.name]
-        out = values[n.inputs[0]] @ w + b
-        return jax.nn.relu(out) if n.relu else out
+        # operands at the network dtype, accumulation in f32 (§11)
+        out = jnp.dot(
+            x, w.astype(x.dtype), preferred_element_type=jnp.float32
+        ) + b
+        out = jax.nn.relu(out) if n.relu else out
+        return out.astype(x.dtype)
     raise AssertionError(f"unhandled op {n.op}")
 
 
@@ -104,28 +147,40 @@ def reference_network(x: jnp.ndarray, graph: Graph, params: Params) -> jnp.ndarr
     return values[graph.output.name]
 
 
-def prepare_network_params(plan: PartitionPlan, params: Params) -> Params:
-    """Pre-flatten the streamed pyramids' weights once per model.
+def prepare_network_params(
+    plan: PartitionPlan, params: Params, dtype: str | None = None
+) -> Params:
+    """Cast params to the plan's compute dtype and pre-flatten streamed
+    weights, once per model.
 
-    Streamed launches DMA from one flat concatenated weight array; without
-    this step every ``run_network`` call re-concatenates it inside the jit
-    graph.  Returns a new params dict with one ``"_flat/<pyramid>"`` entry
-    per streamed pyramid (consumed by :func:`run_network`; plain entries are
-    untouched, so the dict remains a valid pytree for the reference path).
+    ``dtype`` (``None`` = ``plan.compute_dtype``) is the value width the
+    launches move: every conv/dense weight and bias is cast once here
+    instead of per ``run_network`` call inside the jit graph, and each
+    streamed pyramid gets one ``"_flat/<pyramid>"`` concatenated weight
+    array at that width (consumed by :func:`run_network`).  Master params
+    stay f32 in the caller's dict — this returns a new dict.  Stale
+    ``"_flat/"`` entries from a previous preparation are dropped and
+    rebuilt, so re-preparing at another dtype is safe.
     """
-    out: Params = dict(params)
+    cdt = canonical_dtype(plan.compute_dtype if dtype is None else dtype)
+    jdt = jnp_dtype(cdt)
+    out: Params = {
+        k: (w.astype(jdt), b.astype(jdt))
+        for k, (w, b) in params.items()
+        if not k.startswith(_FLAT)
+    }
     graph = plan.graph
     for pyr in plan.pyramids:
         if not pyr.launch.streamed:
             continue
         conv_names = [m for m in pyr.node_names if graph.node(m).op == "conv"]
         out[_FLAT + pyr.name] = flatten_weights(
-            [params[m][0] for m in conv_names]
+            [out[m][0] for m in conv_names], cdt
         )
     return out
 
 
-@partial(jax.jit, static_argnames=("plan", "end_skip", "interpret"))
+@partial(jax.jit, static_argnames=("plan", "end_skip", "interpret", "dtype"))
 def run_network(
     x: jnp.ndarray,
     params: Params,
@@ -133,19 +188,30 @@ def run_network(
     plan: PartitionPlan,
     end_skip: bool = True,
     interpret: bool | None = None,
+    dtype: str | None = None,
 ) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
     """Execute the partition plan end to end for a batch ``x`` (B, H, W, C).
 
+    ``dtype`` (static; name string or jnp dtype, ``None`` =
+    ``plan.compute_dtype``) is the compute dtype of the whole forward:
+    every pyramid launch, plain conv/pool, and head op moves operands at
+    that width with f32 accumulation, and the logits come back at it.
+    Overriding a plan to a *wider* dtype can bust the planned VMEM regimes;
+    the supported direction is planning at the dtype you run
+    (``auto_partition(..., compute_dtype=...)``) or narrowing.
+
     ``interpret=None`` resolves per backend (compiled on TPU).  Params may
     come through :func:`prepare_network_params` so streamed launches reuse
-    the pre-flattened weight arrays.  Returns ``(logits, skips)``:
-    ``skips[pyramid.name]`` is that launch's ``(B, alpha, alpha, Q)`` int32
-    END-cascade flag map (level 0 of each pyramid never skips).  Aggregate
-    with :func:`skip_fractions`.
+    the pre-flattened weight arrays (which must match the run dtype).
+    Returns ``(logits, skips)``: ``skips[pyramid.name]`` is that launch's
+    ``(B, alpha, alpha, Q)`` int32 END-cascade flag map (level 0 of each
+    pyramid never skips).  Aggregate with :func:`skip_fractions`.
     """
+    cdt = canonical_dtype(plan.compute_dtype if dtype is None else dtype)
+    jdt = jnp_dtype(cdt)
     graph = plan.graph
     covered = plan.covered()
-    values = {graph.nodes[0].name: x.astype(jnp.float32)}
+    values = {graph.nodes[0].name: x.astype(jdt)}
     skips: dict[str, jnp.ndarray] = {}
     for n in graph.nodes[1:]:
         if n.name in covered:
@@ -173,12 +239,15 @@ def run_network(
                 interpret=interpret,
                 vmem_budget=plan.vmem_budget,
                 weights_flat=flat,
+                compute_dtype=cdt,
             )
             values[pyr.node_names[-1]] = y
             skips[pyr.name] = skip
         elif n.op == "conv":
             w, b = params[n.name]
-            values[n.name] = _conv_node(values[n.inputs[0]], n, w, b)
+            values[n.name] = _conv_node(
+                values[n.inputs[0]], n, w.astype(jdt), b.astype(jdt)
+            )
         elif n.op == "pool":
             values[n.name] = _pool_node(values[n.inputs[0]], n)
         else:
@@ -204,8 +273,14 @@ def run_model(
     plan: PartitionPlan | None = None,
     seed: int = 0,
     interpret: bool | None = None,
+    dtype: str | None = None,
 ):
     """Convenience one-shot: build the zoo graph, auto-partition, run.
+
+    ``dtype`` selects the compute dtype end to end: the partition is
+    *planned* at it (regimes re-tiered under the narrower bytes) and the
+    params are cast once before the run; master ``params`` (returned) stay
+    f32 so the same dict can be re-run at any dtype.
 
     Returns ``(logits, skips, plan, params)``.  Used by the example script
     and benchmarks; library code should call :func:`run_network` directly.
@@ -219,7 +294,7 @@ def run_model(
         kwargs["num_classes"] = num_classes
     graph = MODELS[name](**kwargs)
     if plan is None:
-        plan = auto_partition(graph, batch=x.shape[0])
+        plan = auto_partition(graph, batch=x.shape[0], compute_dtype=dtype)
     if params is None:
         params = init_network_params(graph, jax.random.PRNGKey(seed))
     prepped = prepare_network_params(plan, params)
