@@ -25,7 +25,10 @@ baseline documents the schedule each number was produced under.
 
 Lower is better for every gated metric, so improvements always pass; a
 genuine improvement should be locked in by refreshing the baseline with
-``--update`` and committing the result.
+``--update`` and committing the result.  On failure the gate prints the
+*full* diff table of every gated metric (baseline vs current vs allowed
+threshold, with per-row status) so one bad number never hides the rest of
+the picture.
 
 Usage::
 
@@ -55,28 +58,81 @@ def gated_metrics(bench: dict) -> dict[str, float]:
     out: dict[str, float] = {}
     for name, row in bench["kernel_dataflow"]["launches"].items():
         for m in LAUNCH_METRICS:
-            out[f"kernel_dataflow/{name}/{m}"] = float(row[m])
+            if m in row:  # absent gated metrics surface as MISSING rows
+                out[f"kernel_dataflow/{name}/{m}"] = float(row[m])
     for model, rows in bench["partition"].items():
         for strategy in PARTITION_STRATEGIES:
             for m in PARTITION_METRICS:
-                out[f"partition/{model}/{strategy}/{m}"] = float(
-                    rows[strategy][m]
-                )
+                if strategy in rows and m in rows[strategy]:
+                    out[f"partition/{model}/{strategy}/{m}"] = float(
+                        rows[strategy][m]
+                    )
     return out
+
+
+def diff_table(current: dict, baseline: dict, tolerance: float) -> list[dict]:
+    """One row per gated metric: baseline vs current vs allowed threshold.
+
+    ``status`` is ``FAIL`` (above threshold), ``MISSING`` (gated metric
+    absent from the current output), ``improved`` (below baseline) or
+    ``ok``.  Every metric gets a row so a failing gate prints the complete
+    picture, not just the first offender."""
+    cur, base = gated_metrics(current), gated_metrics(baseline)
+    rows = []
+    for key, base_val in sorted(base.items()):
+        threshold = base_val * (1.0 + tolerance)
+        cur_val = cur.get(key)
+        if cur_val is None:
+            status = "MISSING"
+        elif cur_val > threshold:
+            status = "FAIL"
+        elif cur_val < base_val:
+            status = "improved"
+        else:
+            status = "ok"
+        rows.append(
+            {
+                "metric": key,
+                "baseline": base_val,
+                "current": cur_val,
+                "threshold": threshold,
+                "delta": (
+                    cur_val / base_val - 1.0
+                    if cur_val is not None and base_val
+                    else None
+                ),
+                "status": status,
+            }
+        )
+    return rows
+
+
+def format_diff_table(rows: list[dict], out=print) -> None:
+    out(
+        f"{'metric':<58} {'baseline':>14} {'current':>14} "
+        f"{'threshold':>14} {'delta':>8}  status"
+    )
+    for r in rows:
+        cur = "—" if r["current"] is None else f"{r['current']:,.6g}"
+        delta = "—" if r["delta"] is None else f"{r['delta']:+.1%}"
+        out(
+            f"{r['metric']:<58} {r['baseline']:>14,.6g} {cur:>14} "
+            f"{r['threshold']:>14,.6g} {delta:>8}  {r['status']}"
+        )
 
 
 def compare(current: dict, baseline: dict, tolerance: float) -> list[str]:
     """Regressions (worse than baseline by > tolerance) as report lines."""
-    cur, base = gated_metrics(current), gated_metrics(baseline)
     failures = []
-    for key, base_val in sorted(base.items()):
-        if key not in cur:
-            failures.append(f"{key}: missing from current benchmark output")
-            continue
-        if cur[key] > base_val * (1.0 + tolerance):
+    for r in diff_table(current, baseline, tolerance):
+        if r["status"] == "MISSING":
             failures.append(
-                f"{key}: {cur[key]:g} vs baseline {base_val:g} "
-                f"(+{(cur[key] / base_val - 1.0):.1%} > {tolerance:.0%})"
+                f"{r['metric']}: missing from current benchmark output"
+            )
+        elif r["status"] == "FAIL":
+            failures.append(
+                f"{r['metric']}: {r['current']:g} vs baseline "
+                f"{r['baseline']:g} (+{r['delta']:.1%} > {tolerance:.0%})"
             )
     return failures
 
@@ -123,6 +179,8 @@ def main(argv: list[str] | None = None) -> int:
               f"(tolerance {args.tolerance:.0%}):")
         for line in failures:
             print(f"  {line}")
+        print("\nfull gated-metric diff:")
+        format_diff_table(diff_table(bench, baseline, args.tolerance))
         return 1
     n = len(gated_metrics(baseline))
     print(f"perf gate OK: {n} metrics within {args.tolerance:.0%} of baseline")

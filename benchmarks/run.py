@@ -3,10 +3,12 @@ whole-network partition comparison, with machine-readable output.
 
 ``PYTHONPATH=src python -m benchmarks.run``  prints ``name,...`` CSV rows and
 writes ``BENCH_pyramid.json`` (``--out`` to relocate) holding the per-workload
-HBM bytes, wall-clock numbers (median of :data:`WALLCLOCK_REPS` timed reps
-after one warm-up, rep count recorded alongside), END skip fractions, and the
-auto-partition vs paper-fusion vs layer-by-layer comparison for every zoo
-model — the rows the perf trajectory tracks.
+HBM bytes, wall-clock numbers (each recorded as its median plus a
+``{p50_ms, p95_ms, reps}`` stats dict over :data:`WALLCLOCK_REPS` timed reps
+after one warm-up), END skip fractions, and the auto-partition vs
+paper-fusion vs layer-by-layer comparison for every zoo model — the rows the
+perf trajectory tracks.  Wall clocks are never gated; the analytic rows are
+(see ``check_regression``).
 
 Sections:
 
@@ -35,18 +37,40 @@ FREQ_MHZ = 100.0
 WALLCLOCK_REPS = 5
 
 
-def _timed_median_ms(fn, reps: int = WALLCLOCK_REPS) -> float:
-    """Median wall-clock milliseconds over ``reps`` timed calls of ``fn``
-    (which must block until its results are ready), after one untimed
-    warm-up call that absorbs jit compilation — single-shot numbers are
-    scheduler noise."""
+def _percentile_ms(times: list[float], q: float) -> float:
+    """Linear-interpolated q-th percentile (times already in ms)."""
+    xs = sorted(times)
+    idx = q / 100.0 * (len(xs) - 1)
+    lo = int(idx)
+    hi = min(lo + 1, len(xs) - 1)
+    return xs[lo] + (xs[hi] - xs[lo]) * (idx - lo)
+
+
+def _timed_stats_ms(fn, reps: int = WALLCLOCK_REPS) -> dict:
+    """Wall-clock stats over ``reps`` timed calls of ``fn`` (which must
+    block until its results are ready), after one untimed warm-up call that
+    absorbs jit compilation — single-shot numbers are scheduler noise.
+
+    Returns ``{"p50_ms", "p95_ms", "reps"}``; every wall-clock metric in
+    BENCH_pyramid.json records this dict alongside its median scalar so the
+    trajectory carries tail latency too.  Wall clocks are never gated by
+    check_regression, so the extra keys do not widen the gate."""
     fn()  # warm-up: jit cache + device transfer
     times = []
     for _ in range(reps):
         t0 = time.perf_counter()
         fn()
         times.append((time.perf_counter() - t0) * 1e3)
-    return statistics.median(times)
+    return {
+        "p50_ms": statistics.median(times),
+        "p95_ms": _percentile_ms(times, 95.0),
+        "reps": reps,
+    }
+
+
+def _timed_median_ms(fn, reps: int = WALLCLOCK_REPS) -> float:
+    """Median-only convenience wrapper around :func:`_timed_stats_ms`."""
+    return _timed_stats_ms(fn, reps)["p50_ms"]
 
 
 def _partition_comparison(csv=print) -> dict:
@@ -246,10 +270,13 @@ def _kernel_dataflow(csv=print, dry_run: bool = True) -> dict:
                 )
                 jax.block_until_ready(y)
 
-            wall[f"{label}_ms"] = _timed_median_ms(call)
+            stats = _timed_stats_ms(call)
+            wall[f"{label}_ms"] = stats["p50_ms"]
+            wall[f"{label}_stats"] = stats
             csv(
                 f"kernel_dataflow_wallclock,lenet_q2,{label},"
-                f"{wall[f'{label}_ms']:.1f},ms_per_call_median{WALLCLOCK_REPS}"
+                f"{stats['p50_ms']:.1f},ms_per_call_median{WALLCLOCK_REPS},"
+                f"p95,{stats['p95_ms']:.1f}"
             )
         if "compiled_ms" not in wall:
             wall["compiled_ms"] = None  # no TPU on this host
@@ -288,9 +315,11 @@ def _lenet_e2e(csv=print) -> dict:
         logits, _ = run_network(x, params, plan=plan)
         jax.block_until_ready(logits)
 
-    dt_ms = _timed_median_ms(call)
+    stats = _timed_stats_ms(call)
+    dt_ms = stats["p50_ms"]
     frac = skip_fractions(skips)
-    csv(f"lenet_e2e,auto_plan,interpret,{dt_ms:.1f},ms_per_batch4")
+    csv(f"lenet_e2e,auto_plan,interpret,{dt_ms:.1f},ms_per_batch4,"
+        f"p95,{stats['p95_ms']:.1f}")
 
     plan16 = auto_partition(graph, batch=4, compute_dtype="bfloat16")
     params16 = prepare_network_params(plan16, raw)
@@ -300,22 +329,29 @@ def _lenet_e2e(csv=print) -> dict:
         logits, _ = run_network(x, params16, plan=plan16)
         jax.block_until_ready(logits)
 
-    dt16_ms = _timed_median_ms(call16)
+    stats16 = _timed_stats_ms(call16)
+    dt16_ms = stats16["p50_ms"]
     err = float(jnp.max(jnp.abs(
         logits_b16.astype(jnp.float32) - logits_f32
     )))
     tol = bf16_logit_tol(logits_f32)
     csv(f"lenet_e2e_bf16,auto_plan,interpret,{dt16_ms:.1f},ms_per_batch4,"
         f"max_abs_err,{err:.4f},tol,{tol:.4f}")
+    # modeled_cycles rides alongside the wall clock so obs.report can join
+    # this workload into the model-vs-measured drift table
     return {
         "hbm_bytes": plan.hbm_bytes(),
+        "modeled_cycles": plan.modeled_cycles(),
         "wallclock_ms": dt_ms,
+        "wallclock_stats": stats,
         "wallclock_reps": WALLCLOCK_REPS,
         "batch": 4,
         "skip_fractions": frac,
         "bf16": {
             "hbm_bytes": plan16.hbm_bytes(),
+            "modeled_cycles": plan16.modeled_cycles(),
             "wallclock_ms": dt16_ms,
+            "wallclock_stats": stats16,
             "max_abs_err": err,
             "logit_tol": tol,
         },
@@ -342,9 +378,12 @@ def _kernel_micro(csv=print) -> dict:
         res, _ = fused_conv2(*args, spec=LENET5_FUSION, out_region=1)
         jax.block_until_ready(res)
 
-    us = _timed_median_ms(call_conv) * 1e3
-    csv(f"kernel_fused_conv_lenet,interpret,{us:.0f},us_per_call")
+    stats = _timed_stats_ms(call_conv)
+    us = stats["p50_ms"] * 1e3
+    csv(f"kernel_fused_conv_lenet,interpret,{us:.0f},us_per_call,"
+        f"p95,{stats['p95_ms'] * 1e3:.0f}")
     out["fused_conv_lenet_us"] = us
+    out["fused_conv_lenet_stats"] = stats
 
     xs = jnp.asarray(np.random.default_rng(0).uniform(-0.03, 0.03, (512, 25)),
                      jnp.float32)
@@ -355,9 +394,12 @@ def _kernel_micro(csv=print) -> dict:
         s, _, _ = online_sop_end(xs, y, 16)
         jax.block_until_ready(s)
 
-    us = _timed_median_ms(call_sop) * 1e3
-    csv(f"kernel_online_sop_512x25,interpret,{us:.0f},us_per_call")
+    stats = _timed_stats_ms(call_sop)
+    us = stats["p50_ms"] * 1e3
+    csv(f"kernel_online_sop_512x25,interpret,{us:.0f},us_per_call,"
+        f"p95,{stats['p95_ms'] * 1e3:.0f}")
     out["online_sop_512x25_us"] = us
+    out["online_sop_512x25_stats"] = stats
     return out
 
 
@@ -407,9 +449,12 @@ def _vgg_q4_fusion_delta(csv=print) -> dict:
             )
             jax.block_until_ready(y)
 
-        wall[label] = _timed_median_ms(call)
+        stats = _timed_stats_ms(call)
+        wall[label] = stats["p50_ms"]
         out[f"wallclock_ms_{label}"] = wall[label]
-        csv(f"vgg_q4_wallclock,{label},interpret,{wall[label]:.1f},ms_per_call")
+        out[f"wallclock_stats_{label}"] = stats
+        csv(f"vgg_q4_wallclock,{label},interpret,{wall[label]:.1f},ms_per_call,"
+            f"p95,{stats['p95_ms']:.1f}")
     csv(
         f"vgg_q4_wallclock_delta,single_vs_chained2,"
         f"{wall['chained2'] - wall['single']:.1f},ms_saved_per_call"

@@ -30,6 +30,7 @@ from repro.net.runner import (
     run_network,
     skip_fractions,
 )
+from repro.obs import tracing
 
 # interpret-friendly default scales (paper scale for LeNet only)
 DEFAULT_SIZE = {"lenet": 32, "alexnet": 67, "vgg16": 32, "resnet18": 32}
@@ -93,13 +94,22 @@ def main() -> None:
         k: (w, b - 0.3) if graph.node(k).op == "conv" else (w, b)
         for k, (w, b) in params.items()
     }
-    logits_s, skips_s = run_network(xs, sparse_params, plan=tight)
+    # run the sparse forward traced (DESIGN.md #12): one measured+modeled
+    # span per fused launch, recorded launch-by-launch
+    with tracing() as collector:
+        logits_s, skips_s = run_network(xs, sparse_params, plan=tight)
     ref_s = reference_network(xs, graph, sparse_params)
     print("sparse input: max |err|", float(jnp.abs(logits_s - ref_s).max()))
     for name, frac in skip_fractions(skips_s).items():
         if any(f > 0 for f in frac):
             print(f"  END skips {name}: "
                   + ", ".join(f"L{i}={f:.0%}" for i, f in enumerate(frac)))
+    print("traced launches (modeled cycle-model time vs measured wall clock):")
+    for s in collector.spans:
+        print(f"  {s.name:<24} {s.regime:<16} modeled {s.modeled_us:>9,.1f}us"
+              f"   measured {s.duration_ms:>9,.1f}ms")
+    print(f"  (python -m repro.obs.explain --model {args.model} "
+          "--trace t.json renders the full plan table + Perfetto timeline)")
 
 
 if __name__ == "__main__":

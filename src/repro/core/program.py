@@ -550,9 +550,11 @@ class LaunchPlan:
             return cand
         return self
 
-    def modeled_cycles(self, batch: int = 1) -> int:
-        """Overlap-aware cycle cost over the launch's uniform-stride grid —
-        the latency tiebreaker of the partitioner's dynamic program.
+    def body_cycles(self) -> int:
+        """Per-grid-cell compute(+weight-DMA) cycles — the ``body`` argument
+        of :func:`~repro.core.cycle_model.grid_pipeline_cycles`, shared by
+        :meth:`modeled_cycles` and the modeled timelines so cost and
+        rendering can never disagree.
 
         Per movement: DS-1 compute cycles (Eq. 3), plus the streamed-weight
         DMA cost at :data:`HBM_BYTES_PER_CYCLE`.  With a double-buffered
@@ -569,60 +571,162 @@ class LaunchPlan:
         overlaps the previous slice's MXU pass (steady), the last slice's
         compute drains exposed.
 
-        The input halo-tile DMA is then composed per batch element by
-        :func:`~repro.core.cycle_model.grid_pipeline_cycles`: serial
-        (``x_slots=1``) pays ``(input_dma + body) * cells``; the revolving
-        cross-cell prefetch (``x_slots=2``) pays
-        ``warmup_fill + body + (cells - 1) * max(body, input_dma)`` — never
-        worse than serial, equal at ``alpha == 1`` (no successor cell).
-
         Both sides of the overlap are dtype-aware: every weight-DMA term
         scales with the program's ``bytes_per_val``, and the MXU compute
         cycles divide by :func:`~repro.core.dtypes.mxu_throughput` (bf16
         operands double the systolic rate) — so narrowing the dtype shrinks
         the DMA *and* the compute it hides behind."""
+        from .cycle_model import channel_tiled_body_cycles
+
+        compute, stream = self._body_terms()
+        if stream is None:
+            return compute
+        kind = stream["kind"]
+        if kind == "channel_tiled":
+            return channel_tiled_body_cycles(
+                stream["compute_mid"],
+                stream["compute_last"],
+                stream["dma_mid"],
+                stream["dma_slice"],
+                self.c_tiles,
+                pipelined=self.w_slots > 1,
+            )
+        if kind == "pipelined":
+            fill, dma = stream["fill"], stream["dma"]
+            return fill + max(compute, dma - fill)
+        return compute + stream["dma"]
+
+    def _body_terms(self) -> tuple[int, dict | None]:
+        """The raw compute/DMA cycle terms of one grid cell: ``(compute,
+        stream)`` with ``stream`` None for resident launches, else a dict
+        naming the weight-DMA regime and its terms — consumed by both
+        :meth:`body_cycles` and :meth:`body_detail_timeline`."""
         from .cycle_model import (
-            channel_tiled_body_cycles,
             ds1_cycles_per_movement,
             ds1_split_cycles_per_movement,
-            grid_pipeline_cycles,
             mxu_scaled_cycles,
         )
 
         bpv = self.program.bytes_per_val
         cdt = self.program.compute_dtype
         compute = mxu_scaled_cycles(ds1_cycles_per_movement(self.spec), cdt)
-        body = compute
-        if self.streamed:
-            cnts = self.program.level_weight_counts()
-            if self.c_tiles > 1:
-                compute_mid, compute_last = ds1_split_cycles_per_movement(
-                    self.spec
-                )
-                compute_mid = mxu_scaled_cycles(compute_mid, cdt)
-                compute_last = mxu_scaled_cycles(compute_last, cdt)
-                dma_mid = -(-bpv * sum(cnts[:-1]) // HBM_BYTES_PER_CYCLE)
-                dma_slice = -(
+        if not self.streamed:
+            return compute, None
+        cnts = self.program.level_weight_counts()
+        if self.c_tiles > 1:
+            compute_mid, compute_last = ds1_split_cycles_per_movement(self.spec)
+            return compute, {
+                "kind": "channel_tiled",
+                "compute_mid": mxu_scaled_cycles(compute_mid, cdt),
+                "compute_last": mxu_scaled_cycles(compute_last, cdt),
+                "dma_mid": -(-bpv * sum(cnts[:-1]) // HBM_BYTES_PER_CYCLE),
+                "dma_slice": -(
                     -bpv * -(-cnts[-1] // self.c_tiles) // HBM_BYTES_PER_CYCLE
-                )
-                body = channel_tiled_body_cycles(
-                    compute_mid,
-                    compute_last,
-                    dma_mid,
-                    dma_slice,
-                    self.c_tiles,
-                    pipelined=self.w_slots > 1,
-                )
-            else:
-                dma = -(-bpv * sum(cnts) // HBM_BYTES_PER_CYCLE)
-                if self.w_slots > 1:
-                    fill = -(-bpv * cnts[0] // HBM_BYTES_PER_CYCLE)
-                    body = fill + max(compute, dma - fill)
-                else:
-                    body = compute + dma
+                ),
+            }
+        dma = -(-bpv * sum(cnts) // HBM_BYTES_PER_CYCLE)
+        if self.w_slots > 1:
+            fill = -(-bpv * cnts[0] // HBM_BYTES_PER_CYCLE)
+            return compute, {"kind": "pipelined", "dma": dma, "fill": fill}
+        return compute, {"kind": "blocking", "dma": dma}
+
+    def body_detail_timeline(self):
+        """DMA-vs-MXU bars *inside* one grid cell — weight movement against
+        the conv cascade (:class:`~repro.core.cycle_model.TimelineSegment`
+        list ending exactly at :meth:`body_cycles`): a single compute bar for
+        resident launches, exposed-then-compute for blocking streams, the
+        fill-overlap shape for the double-buffered weight pipeline, and the
+        k-axis fill/steady/drain for channel-tiled launches."""
+        from .cycle_model import TimelineSegment, channel_tiled_body_timeline
+
+        compute, stream = self._body_terms()
+        if stream is None:
+            return [TimelineSegment("mxu", "pyramid (resident)", 0, compute)]
+        kind = stream["kind"]
+        if kind == "channel_tiled":
+            return channel_tiled_body_timeline(
+                stream["compute_mid"],
+                stream["compute_last"],
+                stream["dma_mid"],
+                stream["dma_slice"],
+                self.c_tiles,
+                pipelined=self.w_slots > 1,
+            )
+        dma = stream["dma"]
+        segs = [TimelineSegment("dma", "weights", 0, dma)]
+        if kind == "pipelined":
+            # compute starts once level 0's weights (the fill) have landed;
+            # later levels' DMA hides behind the cascade
+            segs.append(
+                TimelineSegment("mxu", "pyramid", stream["fill"], compute)
+            )
+        else:
+            segs.append(TimelineSegment("mxu", "pyramid", dma, compute))
+        return segs
+
+    def modeled_timeline(self, *, max_cells: int = 64):
+        """The launch's modeled DMA-vs-MXU timeline for one batch element
+        (:class:`~repro.core.cycle_model.TimelineSegment` list): the
+        uniform-stride grid's input halo-tile stream against the per-cell
+        pyramid bodies, serial or software-pipelined per ``x_slots``, ending
+        exactly at ``modeled_cycles(batch=1)``.  The Chrome-trace exporter
+        (:mod:`repro.obs.timeline`) renders this next to measured spans."""
+        from .cycle_model import grid_pipeline_timeline
+
+        return grid_pipeline_timeline(
+            self.program.alpha ** 2,
+            self.body_cycles(),
+            self.program.input_dma_cycles(),
+            pipelined=self.x_slots > 1,
+            max_cells=max_cells,
+        )
+
+    def describe(
+        self, batch: int = 1, vmem_budget: int | None = None
+    ) -> dict:
+        """The launch as one observability row: every plan knob plus the
+        modeled byte/cycle quantities the planner optimized, in one flat
+        JSON-safe dict (the span schema of DESIGN.md §12 and the row format
+        of ``repro.obs.explain``).  ``vmem_budget`` adds the headroom column
+        (budget minus modeled working set)."""
+        prog = self.program
+        row = {
+            "q_convs": prog.q_convs,
+            "out_region": self.out_region,
+            "alpha": prog.alpha,
+            "regime": self.regime,
+            "streamed": self.streamed,
+            "x_slots": self.x_slots,
+            "w_slots": self.w_slots,
+            "c_tiles": self.c_tiles,
+            "compute_dtype": prog.compute_dtype,
+            "batch": batch,
+            "hbm_bytes": self.hbm_bytes(batch),
+            "vmem_bytes": self.vmem_bytes(),
+            "slice_bytes": self.slice_bytes(),
+            "modeled_cycles": self.modeled_cycles(batch),
+            "body_cycles": self.body_cycles(),
+            "input_dma_cycles": prog.input_dma_cycles(),
+        }
+        if vmem_budget is not None:
+            row["vmem_headroom_bytes"] = vmem_budget - row["vmem_bytes"]
+        return row
+
+    def modeled_cycles(self, batch: int = 1) -> int:
+        """Pipeline-aware cycle cost of the whole launch — the latency
+        tiebreaker of the partitioner's dynamic program.
+
+        The per-cell :meth:`body_cycles` is composed per batch element by
+        :func:`~repro.core.cycle_model.grid_pipeline_cycles`: serial
+        (``x_slots=1``) pays ``(input_dma + body) * cells``; the revolving
+        cross-cell prefetch (``x_slots=2``) pays
+        ``warmup_fill + body + (cells - 1) * max(body, input_dma)`` — never
+        worse than serial, equal at ``alpha == 1`` (no successor cell)."""
+        from .cycle_model import grid_pipeline_cycles
+
         per_image = grid_pipeline_cycles(
             self.program.alpha ** 2,
-            body,
+            self.body_cycles(),
             self.program.input_dma_cycles(),
             pipelined=self.x_slots > 1,
         )

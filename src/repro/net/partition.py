@@ -32,11 +32,13 @@ from __future__ import annotations
 import functools
 import itertools
 from dataclasses import dataclass
+from typing import NamedTuple
 
 from repro.core.dtypes import canonical_dtype
 from repro.core.fusion import FusionSpec
 from repro.core.program import VMEM_BUDGET_BYTES, LaunchPlan, plan_launch
 from repro.kernels.fused_conv.ops import conv_groups
+from repro.obs.trace import get_tracer
 
 from .graph import Graph, Segment, fusable_segments
 
@@ -310,19 +312,72 @@ def auto_partition(
     cdt = canonical_dtype(
         graph.compute_dtype if compute_dtype is None else compute_dtype
     )
-    return _auto_partition_cached(
+    before = _auto_partition_cached.cache_info().misses
+    plan = _auto_partition_cached(
         graph, vmem_budget, batch, max_convs, prefer_region, cdt
+    )
+    hit = _auto_partition_cached.cache_info().misses == before
+    _CACHE_COUNTERS["hits" if hit else "misses"] += 1
+    tracer = get_tracer()
+    if tracer.enabled:
+        tracer.bump("partition_cache_hit" if hit else "partition_cache_miss")
+        tracer.record_event(
+            "auto_partition",
+            model=graph.name,
+            cache="hit" if hit else "miss",
+            batch=batch,
+            compute_dtype=cdt,
+            vmem_budget=vmem_budget,
+            launches=plan.n_launches(),
+            hbm_bytes=plan.hbm_bytes(),
+            modeled_cycles=plan.modeled_cycles(),
+        )
+    return plan
+
+
+class PartitionCacheInfo(NamedTuple):
+    """Hit/miss statistics of the memoized :func:`auto_partition`.
+
+    ``hits``/``misses`` count :func:`auto_partition` *calls* (not raw
+    ``lru_cache`` probes) and — unlike the ``functools`` counters this
+    module previously exposed directly — are reset by
+    :func:`clear_partition_cache`, so repeated benchmark runs that clear
+    between configs report per-run statistics instead of a process-lifetime
+    accumulation."""
+
+    hits: int
+    misses: int
+    currsize: int
+    maxsize: int | None
+
+
+# auto_partition call counters; cleared alongside the plan cache so a
+# cleared cache never reports stale hit/miss history (the trace events and
+# partition_cache_info read the same numbers)
+_CACHE_COUNTERS = {"hits": 0, "misses": 0}
+
+
+def partition_cache_info() -> PartitionCacheInfo:
+    """Cache statistics of the memoized :func:`auto_partition` — counters
+    that reset with :func:`clear_partition_cache` (see
+    :class:`PartitionCacheInfo`)."""
+    lru = _auto_partition_cached.cache_info()
+    return PartitionCacheInfo(
+        hits=_CACHE_COUNTERS["hits"],
+        misses=_CACHE_COUNTERS["misses"],
+        currsize=lru.currsize,
+        maxsize=lru.maxsize,
     )
 
 
-def partition_cache_info():
-    """``functools`` cache statistics of the memoized :func:`auto_partition`."""
-    return _auto_partition_cached.cache_info()
-
-
 def clear_partition_cache() -> None:
-    """Drop all memoized partition plans (e.g. between benchmark configs)."""
+    """Drop all memoized partition plans (e.g. between benchmark configs)
+    and reset the hit/miss counters with them."""
     _auto_partition_cached.cache_clear()
+    _CACHE_COUNTERS["hits"] = _CACHE_COUNTERS["misses"] = 0
+    tracer = get_tracer()
+    if tracer.enabled:
+        tracer.record_event("partition_cache_clear")
 
 
 def min_vmem_budget(graph: Graph, *, compute_dtype: str | None = None) -> int:

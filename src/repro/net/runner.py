@@ -26,14 +26,17 @@ rounding, bounded by :func:`bf16_logit_tol` across the zoo (enforced in
 
 from __future__ import annotations
 
+import time
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cycle_model import DEFAULT_PARAMS
 from repro.core.dtypes import canonical_dtype, jnp_dtype
 from repro.kernels.fused_conv.ops import flatten_weights, fused_pyramid
+from repro.obs.trace import LaunchSpan, get_tracer
 
 from .graph import Graph, Node, infer_shapes
 from .partition import PartitionPlan, auto_partition
@@ -180,7 +183,166 @@ def prepare_network_params(
     return out
 
 
+def _forward(
+    x: jnp.ndarray,
+    params: Params,
+    *,
+    plan: PartitionPlan,
+    end_skip: bool,
+    interpret: bool | None,
+    cdt: str,
+    launch_wrapper=None,
+) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
+    """The plan-driven forward loop, shared by the jit fast path and the
+    traced eager path.  ``launch_wrapper(pyr, call)``, when given, wraps
+    each fused-pyramid launch (the traced path times it there); the jit
+    path passes ``None`` so tracing support adds nothing to the compiled
+    graph."""
+    jdt = jnp_dtype(cdt)
+    graph = plan.graph
+    covered = plan.covered()
+    values = {graph.nodes[0].name: x.astype(jdt)}
+    skips: dict[str, jnp.ndarray] = {}
+    for n in graph.nodes[1:]:
+        if n.name in covered:
+            pyr = plan.pyramid_at(n.name)
+            if pyr is None:
+                continue  # interior pyramid node: computed with its launch
+            conv_names = [m for m in pyr.node_names
+                          if graph.node(m).op == "conv"]
+            flat = params.get(_FLAT + pyr.name)
+
+            def call(pyr=pyr, n=n, conv_names=conv_names, flat=flat):
+                return fused_pyramid(
+                    values[n.inputs[0]],
+                    # streamed launches with pre-flattened weights don't
+                    # need the per-level tensors threaded through the jit
+                    # graph
+                    None if flat is not None
+                    else [params[m][0] for m in conv_names],
+                    [params[m][1] for m in conv_names],
+                    spec=pyr.spec,
+                    out_region=pyr.launch.out_region,
+                    streamed=pyr.launch.streamed,
+                    w_slots=(
+                        pyr.launch.w_slots if pyr.launch.streamed else None
+                    ),
+                    x_slots=pyr.launch.x_slots,
+                    c_tiles=pyr.launch.c_tiles,
+                    relu=pyr.relu,
+                    end_skip=end_skip,
+                    interpret=interpret,
+                    vmem_budget=plan.vmem_budget,
+                    weights_flat=flat,
+                    compute_dtype=cdt,
+                )
+
+            y, skip = call() if launch_wrapper is None else launch_wrapper(
+                pyr, call
+            )
+            values[pyr.node_names[-1]] = y
+            skips[pyr.name] = skip
+        elif n.op == "conv":
+            w, b = params[n.name]
+            values[n.name] = _conv_node(
+                values[n.inputs[0]], n, w.astype(jdt), b.astype(jdt)
+            )
+        elif n.op == "pool":
+            values[n.name] = _pool_node(values[n.inputs[0]], n)
+        else:
+            values[n.name] = _head_op(values, n, params)
+    return values[graph.output.name], skips
+
+
 @partial(jax.jit, static_argnames=("plan", "end_skip", "interpret", "dtype"))
+def _run_network_jit(
+    x: jnp.ndarray,
+    params: Params,
+    *,
+    plan: PartitionPlan,
+    end_skip: bool = True,
+    interpret: bool | None = None,
+    dtype: str | None = None,
+) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
+    cdt = canonical_dtype(plan.compute_dtype if dtype is None else dtype)
+    return _forward(
+        x, params, plan=plan, end_skip=end_skip, interpret=interpret, cdt=cdt
+    )
+
+
+def _run_network_traced(
+    x, params, tracer, *, plan, end_skip, interpret, dtype
+):
+    """The observed forward: the same plan executed launch-by-launch outside
+    the whole-graph jit (each ``fused_pyramid`` call is still jit itself),
+    every launch blocked-until-ready and recorded as a :class:`LaunchSpan`
+    whose modeled fields come straight from the plan — plus per-launch
+    END-skip count events and one ``run_network`` summary event.  Slower
+    than the fused jit path by construction (that is what it measures); the
+    fast path is byte-for-byte unaffected when tracing is off."""
+    cdt = canonical_dtype(plan.compute_dtype if dtype is None else dtype)
+    model = plan.graph.name
+    batch = int(x.shape[0])
+
+    def wrapper(pyr, call):
+        t0 = time.perf_counter()
+        y, skip = call()
+        jax.block_until_ready((y, skip))
+        dur_ms = (time.perf_counter() - t0) * 1e3
+        d = pyr.launch.describe(batch, plan.vmem_budget)
+        tracer.record_span(LaunchSpan(
+            name=pyr.name,
+            model=model,
+            regime=d["regime"],
+            out_region=d["out_region"],
+            alpha=d["alpha"],
+            q_convs=d["q_convs"],
+            x_slots=d["x_slots"],
+            w_slots=d["w_slots"],
+            c_tiles=d["c_tiles"],
+            batch=batch,
+            compute_dtype=cdt,
+            streamed=d["streamed"],
+            hbm_bytes=d["hbm_bytes"],
+            vmem_bytes=d["vmem_bytes"],
+            modeled_cycles=d["modeled_cycles"],
+            modeled_us=d["modeled_cycles"] / DEFAULT_PARAMS.freq_mhz,
+            start_s=t0,
+            duration_ms=dur_ms,
+        ))
+        return y, skip
+
+    t0 = time.perf_counter()
+    logits, skips = _forward(
+        x, params, plan=plan, end_skip=end_skip, interpret=interpret,
+        cdt=cdt, launch_wrapper=wrapper,
+    )
+    jax.block_until_ready(logits)
+    total_ms = (time.perf_counter() - t0) * 1e3
+    for name, skip in skips.items():
+        arr = np.asarray(skip)
+        # per-level count of grid cells the END cascade skipped, plus the
+        # cell total — the runtime twin of the paper's skipped-convolution
+        # accounting (level 0 never skips by construction)
+        tracer.record_event(
+            "end_skip_counts",
+            model=model,
+            launch=name,
+            per_level=[int(c) for c in arr.sum(axis=(0, 1, 2))],
+            cells=int(arr[..., 0].size),
+        )
+    tracer.record_event(
+        "run_network",
+        model=model,
+        batch=batch,
+        compute_dtype=cdt,
+        launches=len(skips),
+        wallclock_ms=total_ms,
+        modeled_cycles=plan.modeled_cycles(),
+    )
+    return logits, skips
+
+
 def run_network(
     x: jnp.ndarray,
     params: Params,
@@ -206,53 +368,24 @@ def run_network(
     Returns ``(logits, skips)``: ``skips[pyramid.name]`` is that launch's
     ``(B, alpha, alpha, Q)`` int32 END-cascade flag map (level 0 of each
     pyramid never skips).  Aggregate with :func:`skip_fractions`.
+
+    Observability (DESIGN.md §12): with a tracer installed
+    (``repro.obs.tracing()``) the forward runs launch-by-launch and records
+    one measured+modeled span per fused launch plus END-skip count events.
+    With the default no-op tracer the whole forward goes through the
+    unchanged jit fast path — the only extra work is this one ``enabled``
+    check, *outside* jit, so tracing-off costs nothing per call.
     """
-    cdt = canonical_dtype(plan.compute_dtype if dtype is None else dtype)
-    jdt = jnp_dtype(cdt)
-    graph = plan.graph
-    covered = plan.covered()
-    values = {graph.nodes[0].name: x.astype(jdt)}
-    skips: dict[str, jnp.ndarray] = {}
-    for n in graph.nodes[1:]:
-        if n.name in covered:
-            pyr = plan.pyramid_at(n.name)
-            if pyr is None:
-                continue  # interior pyramid node: computed with its launch
-            conv_names = [m for m in pyr.node_names
-                          if graph.node(m).op == "conv"]
-            flat = params.get(_FLAT + pyr.name)
-            y, skip = fused_pyramid(
-                values[n.inputs[0]],
-                # streamed launches with pre-flattened weights don't need
-                # the per-level tensors threaded through the jit graph
-                None if flat is not None
-                else [params[m][0] for m in conv_names],
-                [params[m][1] for m in conv_names],
-                spec=pyr.spec,
-                out_region=pyr.launch.out_region,
-                streamed=pyr.launch.streamed,
-                w_slots=pyr.launch.w_slots if pyr.launch.streamed else None,
-                x_slots=pyr.launch.x_slots,
-                c_tiles=pyr.launch.c_tiles,
-                relu=pyr.relu,
-                end_skip=end_skip,
-                interpret=interpret,
-                vmem_budget=plan.vmem_budget,
-                weights_flat=flat,
-                compute_dtype=cdt,
-            )
-            values[pyr.node_names[-1]] = y
-            skips[pyr.name] = skip
-        elif n.op == "conv":
-            w, b = params[n.name]
-            values[n.name] = _conv_node(
-                values[n.inputs[0]], n, w.astype(jdt), b.astype(jdt)
-            )
-        elif n.op == "pool":
-            values[n.name] = _pool_node(values[n.inputs[0]], n)
-        else:
-            values[n.name] = _head_op(values, n, params)
-    return values[graph.output.name], skips
+    tracer = get_tracer()
+    if not tracer.enabled:
+        return _run_network_jit(
+            x, params, plan=plan, end_skip=end_skip, interpret=interpret,
+            dtype=dtype,
+        )
+    return _run_network_traced(
+        x, params, tracer, plan=plan, end_skip=end_skip,
+        interpret=interpret, dtype=dtype,
+    )
 
 
 def skip_fractions(skips: dict[str, jnp.ndarray]) -> dict[str, list[float]]:

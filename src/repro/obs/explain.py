@@ -1,0 +1,178 @@
+"""``python -m repro.obs.explain`` — show what the planner decided and why.
+
+Prints the auto-partition of a zoo model as a per-launch table (covered
+nodes, Q, grid, regime, plan knobs, modeled HBM/VMEM bytes with budget
+headroom, modeled cycles), and optionally:
+
+* ``--trace out.json`` — export a Chrome-trace / Perfetto JSON of every
+  launch's modeled fill/steady/drain DMA-vs-MXU timeline
+  (:mod:`repro.obs.timeline`); with ``--run`` the measured spans of a traced
+  ``run_network`` ride alongside.
+* ``--run`` — execute the plan with tracing enabled (one warm-up then
+  ``--reps`` traced forwards) and print the model-vs-measured drift table
+  (:mod:`repro.obs.report`).
+
+Examples::
+
+    PYTHONPATH=src python -m repro.obs.explain --model vgg16
+    PYTHONPATH=src python -m repro.obs.explain --model lenet --trace t.json
+    PYTHONPATH=src python -m repro.obs.explain --model resnet18 \\
+        --dtype bfloat16 --run --trace t.json
+
+Big models default to the same reduced interpret-friendly input sizes as
+``examples/fused_cnn_inference.py`` when run; the *plan table* is always
+computed at the requested (default paper) scale.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.core.cycle_model import DEFAULT_PARAMS
+
+# interpret-friendly --run scales (paper scale for LeNet only); the table
+# itself defaults to paper scale via the graph builders
+RUN_SIZE = {"lenet": 32, "alexnet": 67, "vgg16": 32, "resnet18": 32}
+
+
+def _fmt_bytes(n: int) -> str:
+    return f"{n / 1024:,.0f}K" if n < 32 * 1024 * 1024 else f"{n / 2**20:,.1f}M"
+
+
+def plan_table(plan, vmem_budget: int, out=print) -> None:
+    """Render a PartitionPlan as one row per launch (the tabular twin of the
+    trace's span schema)."""
+    out(
+        f"{'launch':<26} {'nodes':>5} {'Q':>2} {'grid':>6} {'region':>6} "
+        f"{'regime':<16} {'x/w/c':>6} {'hbm':>9} {'vmem':>9} "
+        f"{'headroom':>9} {'cycles':>10} {'us':>9}"
+    )
+    for p in plan.pyramids:
+        d = p.launch.describe(plan.batch, vmem_budget)
+        out(
+            f"{p.name:<26} {len(p.node_names):>5} {d['q_convs']:>2} "
+            f"{d['alpha']}x{d['alpha']:<4} {d['out_region']:>6} "
+            f"{d['regime']:<16} "
+            f"{d['x_slots']}/{d['w_slots']}/{d['c_tiles']:<2} "
+            f"{_fmt_bytes(d['hbm_bytes']):>9} "
+            f"{_fmt_bytes(d['vmem_bytes']):>9} "
+            f"{_fmt_bytes(d['vmem_headroom_bytes']):>9} "
+            f"{d['modeled_cycles']:>10,} "
+            f"{d['modeled_cycles'] / DEFAULT_PARAMS.freq_mhz:>9,.1f}"
+        )
+    out(
+        f"total: {plan.n_launches()} launches, "
+        f"{plan.hbm_bytes():,} modeled HBM bytes, "
+        f"{plan.modeled_cycles():,} modeled cycles "
+        f"({plan.modeled_cycles() / DEFAULT_PARAMS.freq_mhz:,.1f} us at "
+        f"{DEFAULT_PARAMS.freq_mhz:g} MHz)"
+    )
+
+
+def main(argv: list[str] | None = None) -> int:
+    from repro.core.program import VMEM_BUDGET_BYTES
+    from repro.net.graph import MODELS
+    from repro.net.partition import auto_partition, partition_cache_info
+
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("--model", choices=sorted(MODELS), default="lenet")
+    ap.add_argument("--dtype", choices=("float32", "bfloat16"),
+                    default="float32")
+    ap.add_argument("--input-size", type=int, default=None,
+                    help="spatial input size (default: the model's paper "
+                         "scale; --run defaults to a reduced scale instead)")
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--vmem-budget", type=int, default=VMEM_BUDGET_BYTES)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write a Perfetto/chrome://tracing JSON of the "
+                         "modeled (and, with --run, measured) timelines")
+    ap.add_argument("--run", action="store_true",
+                    help="execute the plan with tracing enabled and report "
+                         "model-vs-measured drift")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="traced forwards after the warm-up (with --run)")
+    args = ap.parse_args(argv)
+
+    size = args.input_size
+    if size is None and args.run:
+        size = RUN_SIZE[args.model]
+    kwargs = {"compute_dtype": args.dtype}
+    if size is not None:
+        kwargs["input_size"] = size
+    graph = MODELS[args.model](**kwargs)
+
+    plan = auto_partition(
+        graph, batch=args.batch, vmem_budget=args.vmem_budget
+    )
+    print(
+        f"{graph.name}: input {graph.input_size}x{graph.input_size}, "
+        f"batch {args.batch}, dtype {plan.compute_dtype}, "
+        f"VMEM budget {_fmt_bytes(args.vmem_budget)}"
+    )
+    plan_table(plan, args.vmem_budget)
+    info = partition_cache_info()
+    print(
+        f"partition cache: {info.hits} hits / {info.misses} misses "
+        f"({info.currsize} plans cached)"
+    )
+
+    collector = None
+    if args.run:
+        import jax
+
+        from repro.net.runner import (
+            init_network_params,
+            prepare_network_params,
+            run_network,
+            skip_fractions,
+        )
+        from repro.obs.report import (
+            drift_report,
+            drift_rows_from_spans,
+            format_report,
+        )
+        from repro.obs.trace import tracing
+
+        params = prepare_network_params(
+            plan, init_network_params(graph, jax.random.PRNGKey(0))
+        )
+        x = jax.random.normal(
+            jax.random.PRNGKey(1),
+            (args.batch, graph.input_size, graph.input_size,
+             graph.in_channels),
+        )
+        logits, _ = run_network(x, params, plan=plan)  # untraced warm-up
+        jax.block_until_ready(logits)
+        print(f"\nrunning {args.reps} traced forwards "
+              f"(interpret={jax.default_backend() != 'tpu'}) ...")
+        with tracing() as collector:
+            for _ in range(args.reps):
+                _, skips = run_network(x, params, plan=plan)
+        frac = skip_fractions(skips)
+        for name, f in frac.items():
+            if any(v > 0 for v in f):
+                print(f"END skips {name}: "
+                      + ", ".join(f"L{i}={v:.0%}" for i, v in enumerate(f)))
+        print()
+        format_report(drift_report(drift_rows_from_spans(collector.spans)))
+
+    if args.trace:
+        from repro.obs.timeline import chrome_trace, write_chrome_trace
+
+        trace = chrome_trace(
+            collector,
+            launches=[(p.name, p.launch) for p in plan.pyramids],
+        )
+        write_chrome_trace(args.trace, trace)
+        print(f"\nwrote {args.trace} "
+              f"({len(trace['traceEvents'])} events — load in "
+              "ui.perfetto.dev or chrome://tracing)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

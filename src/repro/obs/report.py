@@ -1,0 +1,189 @@
+"""Model-vs-measured drift report: is the cycle model still predictive?
+
+The partitioner picks cuts and regimes by modeled cycles alone; this report
+joins those modeled costs against measured wall-clock medians per launch and
+flags the launches whose modeled-vs-measured ratio deviates from the fleet
+median — the seed of measured autotuning (ROADMAP "close the
+model-vs-hardware loop").
+
+The *absolute* ratio is expected to be far from 1 off-TPU (interpret mode
+runs orders of magnitude slower than the 100 MHz cycle model), so drift is
+defined **relatively**: the fleet-median ratio is the calibration constant,
+and a launch is flagged when its own ratio falls outside
+``[median / factor, median * factor]``.  A flagged launch is one the model
+prices wrongly *relative to its peers* — exactly the launches a measured
+autotuner should revisit first.
+
+Inputs: spans from a traced ``run_network``
+(:func:`drift_rows_from_spans`) or a ``BENCH_pyramid.json``
+(:func:`drift_rows_from_bench`).  CLI::
+
+    PYTHONPATH=src python -m repro.obs.report --bench BENCH_pyramid.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+
+from repro.core.cycle_model import DEFAULT_PARAMS
+
+FLAG_FACTOR = 3.0
+
+
+def _modeled_ms(cycles: float, freq_mhz: float = DEFAULT_PARAMS.freq_mhz):
+    return cycles / (freq_mhz * 1e3)
+
+
+def drift_rows_from_spans(spans) -> list[dict]:
+    """One row per distinct launch from traced spans: the measured median of
+    that launch's repetitions against its modeled cost."""
+    groups: dict[tuple, list] = {}
+    for s in spans:
+        key = (s.model, s.name, s.regime, s.compute_dtype, s.batch)
+        groups.setdefault(key, []).append(s)
+    rows = []
+    for (model, name, regime, dtype, batch), ss in groups.items():
+        measured = statistics.median(s.duration_ms for s in ss)
+        modeled = ss[0].modeled_cycles
+        rows.append(
+            {
+                "launch": f"{model}/{name}",
+                "regime": regime,
+                "compute_dtype": dtype,
+                "batch": batch,
+                "reps": len(ss),
+                "modeled_cycles": modeled,
+                "modeled_ms": _modeled_ms(modeled),
+                "measured_ms": measured,
+            }
+        )
+    return rows
+
+
+def drift_rows_from_bench(bench: dict) -> list[dict]:
+    """Joinable (modeled, measured) pairs from a ``BENCH_pyramid.json``.
+
+    Launch rows under ``kernel_dataflow.launches`` carry ``modeled_cycles``;
+    measured medians come from the ``kernel_dataflow.wallclock`` section
+    (the LeNet Q=2 kernel, interpret and — on a TPU host — compiled) and
+    from the end-to-end workload sections, which record ``modeled_cycles``
+    alongside their wall clocks since PR 7.  Rows missing either side are
+    skipped, so the report runs on both old and new benchmark files."""
+    rows: list[dict] = []
+    kd = bench.get("kernel_dataflow", {})
+    wall = kd.get("wallclock", {})
+    lenet = kd.get("launches", {}).get("lenet_q2")
+    if lenet:
+        for mode in ("interpret", "compiled"):
+            ms = wall.get(f"{mode}_ms")
+            if ms is None:
+                continue
+            rows.append(
+                {
+                    "launch": f"kernel/lenet_q2 ({mode})",
+                    "regime": lenet.get("regime", "?"),
+                    "compute_dtype": lenet.get("compute_dtype", "float32"),
+                    "batch": 1,
+                    "reps": wall.get("reps", 1),
+                    "modeled_cycles": lenet["modeled_cycles"],
+                    "modeled_ms": _modeled_ms(lenet["modeled_cycles"]),
+                    "measured_ms": ms,
+                }
+            )
+    for name, wl in bench.get("workloads", {}).items():
+        variants = [("", wl)]
+        if isinstance(wl.get("bf16"), dict):
+            variants.append(("_bf16", wl["bf16"]))
+        for suffix, row in variants:
+            cycles, ms = row.get("modeled_cycles"), row.get("wallclock_ms")
+            if cycles is None or ms is None:
+                continue
+            rows.append(
+                {
+                    "launch": f"workload/{name}{suffix}",
+                    "regime": row.get("regime", "plan"),
+                    "compute_dtype": (
+                        "bfloat16" if suffix else "float32"
+                    ),
+                    "batch": wl.get("batch", 1),
+                    "reps": wl.get("wallclock_reps", 1),
+                    "modeled_cycles": cycles,
+                    "modeled_ms": _modeled_ms(cycles),
+                    "measured_ms": ms,
+                }
+            )
+    return rows
+
+
+def drift_report(rows: list[dict], flag_factor: float = FLAG_FACTOR) -> dict:
+    """Attach per-row ratios and drift flags; compute the fleet median.
+
+    Each row gains ``ratio`` (measured / modeled — the launch's private
+    "slowdown constant"), ``drift`` (ratio / fleet median) and ``flagged``
+    (drift outside ``[1/flag_factor, flag_factor]``).  Returns
+    ``{"rows", "median_ratio", "flag_factor", "flagged"}``."""
+    rows = [dict(r) for r in rows]
+    ratios = []
+    for r in rows:
+        r["ratio"] = (
+            r["measured_ms"] / r["modeled_ms"] if r["modeled_ms"] else float("inf")
+        )
+        ratios.append(r["ratio"])
+    median = statistics.median(ratios) if ratios else 0.0
+    flagged = []
+    for r in rows:
+        r["drift"] = r["ratio"] / median if median else 0.0
+        r["flagged"] = not (1.0 / flag_factor <= r["drift"] <= flag_factor)
+        if r["flagged"]:
+            flagged.append(r["launch"])
+    return {
+        "rows": rows,
+        "median_ratio": median,
+        "flag_factor": flag_factor,
+        "flagged": flagged,
+    }
+
+
+def format_report(report: dict, out=print) -> None:
+    rows = report["rows"]
+    if not rows:
+        out("drift report: no joinable (modeled, measured) launches")
+        return
+    out(
+        f"{'launch':<36} {'regime':<16} {'dtype':<9} {'modeled_ms':>11} "
+        f"{'measured_ms':>11} {'ratio':>10} {'drift':>7}  flag"
+    )
+    for r in sorted(rows, key=lambda r: -r["drift"]):
+        out(
+            f"{r['launch']:<36} {r['regime']:<16} {r['compute_dtype']:<9} "
+            f"{r['modeled_ms']:>11.4f} {r['measured_ms']:>11.4f} "
+            f"{r['ratio']:>10.1f} {r['drift']:>7.2f}  "
+            f"{'DRIFT' if r['flagged'] else 'ok'}"
+        )
+    out(
+        f"fleet median measured/modeled ratio: {report['median_ratio']:.1f} "
+        f"(flag factor {report['flag_factor']:g}; "
+        f"{len(report['flagged'])} flagged)"
+    )
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench", default="BENCH_pyramid.json",
+                    help="benchmark JSON to join modeled vs measured from")
+    ap.add_argument("--flag-factor", type=float, default=FLAG_FACTOR,
+                    help="relative deviation from the fleet median ratio "
+                         "that flags a launch (default 3.0)")
+    args = ap.parse_args(argv)
+    with open(args.bench) as f:
+        bench = json.load(f)
+    report = drift_report(drift_rows_from_bench(bench), args.flag_factor)
+    format_report(report)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,169 @@
+"""Structured launch tracing: spans, events, counters, and the global hook.
+
+One :class:`LaunchSpan` is recorded per fused-pyramid launch — the plan's
+static knobs and modeled costs (what the planner promised) next to the
+measured wall clock (what the launch did).  :class:`TraceEvent` covers
+everything that is not a launch: ``auto_partition`` cache hits/misses,
+per-level END-skip counts, whole-forward timings.
+
+The collector is deliberately dumb — append-only lists plus a counter dict
+— so instrumented code stays cheap and every export/analysis concern lives
+in :mod:`repro.obs.timeline` / :mod:`repro.obs.report`.
+
+The process-global tracer defaults to :data:`NULL_TRACER`, whose
+``enabled`` is ``False``: instrumented call sites check that one attribute
+and take their uninstrumented fast path, so tracing-off adds zero work
+inside jit-compiled code (the check happens outside the jit boundary; the
+jit cache is keyed exactly as before).  Enable collection with::
+
+    from repro.obs import tracing
+
+    with tracing() as collector:
+        run_network(x, params, plan=plan)
+    print(collector.spans)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import time
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class LaunchSpan:
+    """One fused-pyramid launch: planned knobs + modeled costs + measurement.
+
+    ``start_s`` is :func:`time.perf_counter` at launch start (comparable
+    only within one process); ``duration_ms`` is the measured wall clock of
+    the launch with its results blocked until ready — in interpret mode the
+    first call includes jit tracing, so callers wanting steady-state numbers
+    warm up first (``repro.obs.explain --run`` does).  The modeled fields
+    are the exact quantities the partitioner optimized, copied from the
+    :class:`~repro.core.program.LaunchPlan` so model-vs-measured joins never
+    re-derive them.
+    """
+
+    name: str  # pyramid name, e.g. "CL1..MPL2"
+    model: str  # graph name, e.g. "lenet"
+    regime: str  # resident / streamed_w2 / streamed_w2_c4 / ...
+    out_region: int
+    alpha: int
+    q_convs: int
+    x_slots: int
+    w_slots: int
+    c_tiles: int
+    batch: int
+    compute_dtype: str
+    streamed: bool
+    hbm_bytes: int  # modeled off-chip traffic of the launch (batch-scaled)
+    vmem_bytes: int  # modeled resident working set
+    modeled_cycles: int  # pipeline-aware cycle model (batch-scaled)
+    modeled_us: float  # modeled_cycles at the cycle model's 100 MHz
+    start_s: float
+    duration_ms: float
+
+
+@dataclass(frozen=True)
+class TraceEvent:
+    """A point event: cache hit/miss, skip stats, forward-level timing."""
+
+    name: str
+    ts_s: float
+    args: dict
+
+
+class TraceCollector:
+    """Append-only span/event store with named counters.
+
+    ``enabled`` is class-level ``True`` so the instrumented fast-path check
+    (``get_tracer().enabled``) costs one attribute load either way.
+    """
+
+    enabled = True
+
+    def __init__(self) -> None:
+        self.spans: list[LaunchSpan] = []
+        self.events: list[TraceEvent] = []
+        self.counters: dict[str, int] = {}
+
+    def record_span(self, span: LaunchSpan) -> None:
+        self.spans.append(span)
+
+    def record_event(self, name: str, **args) -> None:
+        self.events.append(
+            TraceEvent(name=name, ts_s=time.perf_counter(), args=args)
+        )
+
+    def bump(self, counter: str, n: int = 1) -> None:
+        self.counters[counter] = self.counters.get(counter, 0) + n
+
+
+class _NullTracer:
+    """The zero-overhead default: nothing is recorded, nothing is kept.
+
+    Instrumented sites gate on ``enabled`` before doing any span/event work,
+    but the record methods exist (as no-ops) so a site that doesn't bother
+    gating stays correct."""
+
+    enabled = False
+    spans: tuple = ()
+    events: tuple = ()
+    counters: dict = {}
+
+    def record_span(self, span: LaunchSpan) -> None:
+        pass
+
+    def record_event(self, name: str, **args) -> None:
+        pass
+
+    def bump(self, counter: str, n: int = 1) -> None:
+        pass
+
+
+NULL_TRACER = _NullTracer()
+
+_tracer = NULL_TRACER
+
+
+def get_tracer():
+    """The process-global tracer: :data:`NULL_TRACER` unless a collector was
+    installed via :func:`set_tracer` / :func:`tracing`."""
+    return _tracer
+
+
+def set_tracer(tracer) -> None:
+    """Install ``tracer`` globally (``None`` restores the no-op default)."""
+    global _tracer
+    _tracer = NULL_TRACER if tracer is None else tracer
+
+
+@contextlib.contextmanager
+def tracing(collector: TraceCollector | None = None):
+    """Scope a collector as the global tracer; yields the collector.
+
+    Nesting restores the previous tracer on exit, so a traced benchmark can
+    call traced helpers without clobbering the outer collection.
+    """
+    col = TraceCollector() if collector is None else collector
+    prev = get_tracer()
+    set_tracer(col)
+    try:
+        yield col
+    finally:
+        set_tracer(prev)
+
+
+@dataclass
+class SpanTimer:
+    """Tiny helper for measuring one span body: ``start()`` ... ``stop()``
+    returns (start_s, duration_ms)."""
+
+    start_s: float = field(default=0.0)
+
+    def start(self) -> SpanTimer:
+        self.start_s = time.perf_counter()
+        return self
+
+    def stop_ms(self) -> float:
+        return (time.perf_counter() - self.start_s) * 1e3

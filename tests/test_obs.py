@@ -1,0 +1,430 @@
+"""Observability subsystem (DESIGN.md §12): tracer dispatch and overhead,
+traced-run span schema, END-skip count events vs reference dead tiles,
+timeline/cycle-model consistency, Chrome-trace export across the zoo, the
+drift report, partition-cache counters, and the benchmark satellites
+(p50/p95 stats, regression diff table)."""
+
+import json
+import pathlib
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.cnn_models import LENET5_FUSION, VGG_FUSION, resnet18_fusions
+from repro.core.cycle_model import timeline_end
+from repro.core.program import plan_launch
+from repro.net.graph import MODELS, lenet5
+from repro.net.partition import (
+    auto_partition,
+    clear_partition_cache,
+    partition_cache_info,
+)
+from repro.net import runner
+from repro.net.runner import (
+    init_network_params,
+    prepare_network_params,
+    run_network,
+)
+from repro.obs.report import (
+    drift_report,
+    drift_rows_from_bench,
+    drift_rows_from_spans,
+)
+from repro.obs.timeline import chrome_trace, validate_chrome_trace
+from repro.obs.trace import NULL_TRACER, get_tracer, tracing
+
+from test_pyramid_kernel import _expected_skip_maps
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+if str(REPO) not in sys.path:
+    # benchmarks/ is a namespace package at the repo root (run via
+    # ``python -m benchmarks.run``); make it importable for the satellites
+    sys.path.insert(0, str(REPO))
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _traced_lenet(batch=2, reps=1, bias_shift=0.0, sparse=False):
+    """One traced LeNet forward (plus optional extra reps) returning
+    (collector, plan, skips, raw_params, x)."""
+    import jax.numpy as jnp
+
+    graph = lenet5()
+    raw = init_network_params(graph, KEY)
+    if bias_shift:
+        raw = {k: (w, b + bias_shift) for k, (w, b) in raw.items()}
+    if sparse:
+        blob = graph.input_size // 3
+        x = jnp.zeros((batch, graph.input_size, graph.input_size, 1))
+        x = x.at[:, :blob, :blob, :].set(5.0)
+    else:
+        x = jax.random.normal(
+            jax.random.PRNGKey(1),
+            (batch, graph.input_size, graph.input_size, 1),
+        )
+    plan = auto_partition(graph, batch=batch)
+    params = prepare_network_params(plan, raw)
+    with tracing() as collector:
+        for _ in range(reps):
+            _, skips = run_network(x, params, plan=plan)
+    return collector, plan, skips, raw, x
+
+
+class TestTracerDispatch:
+    def test_default_tracer_is_noop(self):
+        t = get_tracer()
+        assert t is NULL_TRACER and not t.enabled
+
+    def test_disabled_tracing_uses_unchanged_jit_path(self, monkeypatch):
+        """With the no-op tracer the public run_network must hit the jit
+        fast path without even touching the traced implementation — the
+        dispatch check is the *only* tracing cost when disabled."""
+
+        def boom(*a, **k):
+            raise AssertionError("traced path must not run")
+
+        monkeypatch.setattr(runner, "_run_network_traced", boom)
+        graph = lenet5()
+        raw = init_network_params(graph, KEY)
+        plan = auto_partition(graph, batch=1)
+        params = prepare_network_params(plan, raw)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32, 1))
+        logits, _ = run_network(x, params, plan=plan)
+        assert logits.shape == (1, 10)
+
+    def test_traced_path_matches_jit_path(self):
+        """Tracing changes scheduling (eager launch-by-launch), never
+        numerics: same logits either way."""
+        graph = lenet5()
+        raw = init_network_params(graph, KEY)
+        plan = auto_partition(graph, batch=2)
+        params = prepare_network_params(plan, raw)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 1))
+        fast, _ = run_network(x, params, plan=plan)
+        with tracing():
+            traced, _ = run_network(x, params, plan=plan)
+        np.testing.assert_allclose(
+            np.asarray(fast), np.asarray(traced), atol=1e-6
+        )
+
+    def test_tracing_context_restores_previous(self):
+        with tracing() as outer:
+            with tracing() as inner:
+                assert get_tracer() is inner
+            assert get_tracer() is outer
+        assert get_tracer() is NULL_TRACER
+
+
+class TestTracedSpans:
+    def test_spans_have_modeled_and_measured_fields(self):
+        collector, plan, _, _, _ = _traced_lenet(batch=2, reps=2)
+        assert len(collector.spans) == 2 * plan.n_launches()
+        for s in collector.spans:
+            assert s.model == "lenet" and s.name
+            assert s.regime and s.compute_dtype == "float32"
+            assert s.hbm_bytes > 0 and s.vmem_bytes > 0
+            assert s.modeled_cycles > 0 and s.modeled_us > 0
+            assert s.duration_ms > 0 and s.start_s > 0
+            assert s.batch == 2 and s.alpha > 0 and s.q_convs > 0
+
+    def test_run_network_summary_event(self):
+        collector, plan, _, _, _ = _traced_lenet(batch=1, reps=1)
+        summaries = [e for e in collector.events if e.name == "run_network"]
+        assert len(summaries) == 1
+        args = summaries[0].args
+        assert args["launches"] == plan.n_launches()
+        assert args["wallclock_ms"] > 0
+        assert args["modeled_cycles"] == plan.modeled_cycles()
+
+
+class TestEndSkipEvents:
+    def test_skip_counts_match_reference_dead_tiles(self):
+        """End-to-end satellite: the runner's per-level END-skip counts must
+        equal the reference count of post-ReLU all-zero tiles, per batch
+        element, on a seeded sparse input with mixed live/dead tiles.
+
+        LeNet's auto plan covers the whole 5x5 output in one movement
+        (alpha=1), so the pyramid is re-planned at out_region=1 — a 5x5
+        movement grid whose border tiles go dead under the sparse blob."""
+        import dataclasses
+
+        import jax.numpy as jnp
+
+        graph = lenet5()
+        raw = init_network_params(graph, KEY)
+        raw = {k: (w, b - 0.5) for k, (w, b) in raw.items()}
+        blob = graph.input_size // 3
+        x = jnp.zeros((2, graph.input_size, graph.input_size, 1))
+        x = x.at[:, :blob, :blob, :].set(5.0)
+        plan = auto_partition(graph, batch=2)
+        assert len(plan.pyramids) == 1  # LeNet fuses its whole conv trunk
+        pyr = dataclasses.replace(
+            plan.pyramids[0],
+            launch=plan_launch(
+                plan.pyramids[0].spec, prefer_region="smallest"
+            ),
+        )
+        assert pyr.launch.out_region == 1
+        plan = dataclasses.replace(plan, pyramids=(pyr,))
+        params = prepare_network_params(plan, raw)
+        with tracing() as collector:
+            _, skips = run_network(x, params, plan=plan)
+        conv_names = [
+            m for m in pyr.node_names if plan.graph.node(m).op == "conv"
+        ]
+        weights = [np.asarray(raw[m][0]) for m in conv_names]
+        biases = [np.asarray(raw[m][1]) for m in conv_names]
+        got = np.asarray(skips[pyr.name])
+        expected = np.stack(
+            [
+                _expected_skip_maps(
+                    pyr.spec, weights, biases, x[b : b + 1],
+                    pyr.launch.out_region,
+                )[0]
+                for b in range(x.shape[0])
+            ]
+        )
+        np.testing.assert_array_equal(got, expected)
+        assert 0 < expected[..., 1].sum() < expected[..., 1].size, (
+            "test needs mixed live/dead tiles to be meaningful"
+        )
+        # and the traced event aggregates the same counts
+        evs = [e for e in collector.events if e.name == "end_skip_counts"]
+        assert len(evs) == 1 and evs[0].args["launch"] == pyr.name
+        assert evs[0].args["per_level"] == [
+            int(c) for c in expected.sum(axis=(0, 1, 2))
+        ]
+        assert evs[0].args["cells"] == expected[..., 0].size
+
+
+class TestTimelines:
+    SPECS = {
+        "lenet_q2": LENET5_FUSION,
+        "vgg_q4": VGG_FUSION,
+        "resnet18_b7": resnet18_fusions()[7],
+    }
+
+    @pytest.mark.parametrize("name", sorted(SPECS))
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+    def test_timeline_end_equals_modeled_cycles(self, name, dtype):
+        """The exported timeline is a *twin* of the cycle model: its last
+        bar ends exactly at modeled_cycles (and the per-cell detail at
+        body_cycles), at any elision level."""
+        import dataclasses
+
+        lp = plan_launch(self.SPECS[name], compute_dtype=dtype)
+        for launch in (lp, dataclasses.replace(lp, x_slots=1, w_slots=1)):
+            assert timeline_end(
+                launch.modeled_timeline()
+            ) == launch.modeled_cycles()
+            assert timeline_end(
+                launch.modeled_timeline(max_cells=4)
+            ) == launch.modeled_cycles()
+            detail = launch.body_detail_timeline()
+            assert timeline_end(detail) == launch.body_cycles()
+            for seg in launch.modeled_timeline():
+                assert seg.lane in ("mxu", "dma")
+                assert seg.start >= 0 and seg.duration >= 0
+
+
+class TestChromeTrace:
+    @pytest.mark.parametrize("model", sorted(MODELS))
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+    def test_zoo_modeled_trace_validates(self, model, dtype):
+        """Acceptance: a Perfetto-loadable trace for every zoo model at
+        both compute dtypes (modeled tracks are analytic — no kernels)."""
+        plan = auto_partition(MODELS[model](), compute_dtype=dtype)
+        trace = chrome_trace(
+            launches=[(p.name, p.launch) for p in plan.pyramids]
+        )
+        assert validate_chrome_trace(trace) == []
+        xs = [e for e in trace["traceEvents"] if e["ph"] == "X"]
+        assert len(xs) > 0
+        assert all(e["cat"] in ("modeled", "modeled-detail") for e in xs)
+
+    def test_measured_trace_round_trips(self, tmp_path):
+        from repro.obs.timeline import write_chrome_trace
+
+        collector, plan, _, _, _ = _traced_lenet(batch=1, reps=1)
+        trace = chrome_trace(
+            collector, launches=[(p.name, p.launch) for p in plan.pyramids]
+        )
+        assert validate_chrome_trace(trace) == []
+        cats = {e.get("cat") for e in trace["traceEvents"]}
+        assert {"modeled", "measured", "event"} <= cats
+        path = tmp_path / "trace.json"
+        write_chrome_trace(str(path), trace)
+        assert validate_chrome_trace(json.loads(path.read_text())) == []
+
+    def test_validator_rejects_malformed(self):
+        assert validate_chrome_trace({"traceEvents": [{"ph": "Z"}]})
+        assert validate_chrome_trace({"traceEvents": "nope"})
+        bad_span = {"ph": "X", "name": "s", "pid": 1, "tid": 0, "ts": -1,
+                    "dur": 1}
+        assert validate_chrome_trace({"traceEvents": [bad_span]})
+
+
+class TestDriftReport:
+    def test_rows_from_traced_spans(self):
+        collector, plan, _, _, _ = _traced_lenet(batch=1, reps=3)
+        rows = drift_rows_from_spans(collector.spans)
+        assert len(rows) == plan.n_launches()  # reps collapse to medians
+        for r in rows:
+            assert r["reps"] == 3
+            assert r["modeled_ms"] > 0 and r["measured_ms"] > 0
+        rep = drift_report(rows)
+        assert rep["median_ratio"] > 0
+        assert all("drift" in r and "flagged" in r for r in rep["rows"])
+
+    def test_committed_bench_file_joins(self):
+        """Acceptance: the drift report runs on BENCH_pyramid.json data."""
+        with open(REPO / "BENCH_pyramid.json") as f:
+            bench = json.load(f)
+        rows = drift_rows_from_bench(bench)
+        assert len(rows) >= 1
+        rep = drift_report(rows)
+        assert rep["median_ratio"] > 0
+
+    def test_outlier_is_flagged(self):
+        def row(name, measured):
+            return {
+                "launch": name, "regime": "resident",
+                "compute_dtype": "float32", "batch": 1, "reps": 3,
+                "modeled_cycles": 1000, "modeled_ms": 0.01,
+                "measured_ms": measured,
+            }
+
+        rows = [row("a", 1.0), row("b", 1.1), row("c", 0.9),
+                row("d", 50.0)]
+        rep = drift_report(rows, flag_factor=3.0)
+        assert rep["flagged"] == ["d"]
+
+    def test_old_bench_files_skip_gracefully(self):
+        """Workload rows without modeled_cycles (pre-PR-7 files) are
+        skipped, not crashed on."""
+        bench = {"workloads": {"old": {"wallclock_ms": 1.0}}}
+        assert drift_rows_from_bench(bench) == []
+
+
+class TestPartitionCacheCounters:
+    def test_counters_track_hits_and_reset_on_clear(self):
+        clear_partition_cache()
+        info = partition_cache_info()
+        assert info.hits == 0 and info.misses == 0
+        g = lenet5()
+        p1 = auto_partition(g, batch=3)
+        p2 = auto_partition(g, batch=3)
+        assert p1 is p2  # cached plan object
+        info = partition_cache_info()
+        assert info.misses >= 1 and info.hits >= 1
+        assert info.currsize >= 1
+        clear_partition_cache()
+        info = partition_cache_info()
+        assert info.hits == 0 and info.misses == 0 and info.currsize == 0
+
+    def test_cache_events_traced(self):
+        clear_partition_cache()
+        g = lenet5()
+        with tracing() as collector:
+            auto_partition(g, batch=3)
+            auto_partition(g, batch=3)
+        evs = [e for e in collector.events if e.name == "auto_partition"]
+        assert [e.args["cache"] for e in evs] == ["miss", "hit"]
+        assert all(e.args["model"] == "lenet" for e in evs)
+
+
+class TestExplainCLI:
+    def test_table_and_trace_for_lenet(self, tmp_path, capsys):
+        from repro.obs.explain import main
+
+        out = tmp_path / "t.json"
+        assert main(["--model", "lenet", "--trace", str(out)]) == 0
+        text = capsys.readouterr().out
+        assert "regime" in text and "partition cache" in text
+        assert validate_chrome_trace(json.loads(out.read_text())) == []
+
+    @pytest.mark.parametrize("model", sorted(MODELS))
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+    def test_zoo_tables_render(self, model, dtype, capsys):
+        """Acceptance: the plan table renders for every zoo model at both
+        dtypes (analytic — no --run)."""
+        from repro.obs.explain import main
+
+        assert main(["--model", model, "--dtype", dtype]) == 0
+        text = capsys.readouterr().out
+        assert "total:" in text and "launches" in text
+
+
+class TestBenchmarkSatellites:
+    def test_timed_stats_keys_and_ordering(self):
+        from benchmarks.run import _percentile_ms, _timed_stats_ms
+
+        stats = _timed_stats_ms(lambda: None, reps=7)
+        assert set(stats) == {"p50_ms", "p95_ms", "reps"}
+        assert stats["reps"] == 7
+        assert 0 <= stats["p50_ms"] <= stats["p95_ms"]
+        assert _percentile_ms([1.0, 2.0, 3.0, 4.0], 50.0) == 2.5
+        assert _percentile_ms([1.0, 2.0, 3.0, 4.0], 100.0) == 4.0
+        assert _percentile_ms([5.0], 95.0) == 5.0
+
+    @staticmethod
+    def _mini_bench(hbm=100.0, cycles=50.0):
+        return {
+            "kernel_dataflow": {
+                "launches": {
+                    "w1": {
+                        "hbm_bytes_total": hbm,
+                        "modeled_cycles": cycles,
+                        "input_bytes_halo": 10,
+                        "slice_bytes": 0,
+                    }
+                }
+            },
+            "partition": {
+                "m": {
+                    "auto": {"hbm_bytes": 1000, "modeled_latency_us": 5.0},
+                    "auto_bf16": {"hbm_bytes": 500,
+                                  "modeled_latency_us": 3.0},
+                }
+            },
+        }
+
+    def test_diff_table_statuses(self):
+        from benchmarks.check_regression import compare, diff_table
+
+        base = self._mini_bench()
+        cur = self._mini_bench(hbm=200.0, cycles=40.0)
+        rows = {r["metric"]: r for r in diff_table(cur, base, 0.10)}
+        assert len(rows) == 8  # every gated metric gets a row
+        assert rows["kernel_dataflow/w1/hbm_bytes_total"]["status"] == "FAIL"
+        assert rows["kernel_dataflow/w1/modeled_cycles"]["status"] == (
+            "improved"
+        )
+        assert rows["partition/m/auto/hbm_bytes"]["status"] == "ok"
+        assert rows["kernel_dataflow/w1/hbm_bytes_total"]["threshold"] == (
+            pytest.approx(110.0)
+        )
+        assert len(compare(cur, base, 0.10)) == 1
+
+    def test_diff_table_missing_metric(self):
+        from benchmarks.check_regression import compare, diff_table
+
+        base = self._mini_bench()
+        cur = self._mini_bench()
+        del cur["kernel_dataflow"]["launches"]["w1"]["slice_bytes"]
+        rows = {r["metric"]: r for r in diff_table(cur, base, 0.10)}
+        row = rows["kernel_dataflow/w1/slice_bytes"]
+        assert row["status"] == "MISSING" and row["current"] is None
+        assert any("missing" in line for line in compare(cur, base, 0.10))
+
+    def test_format_diff_table_renders_every_row(self, capsys):
+        from benchmarks.check_regression import diff_table, format_diff_table
+
+        base = self._mini_bench()
+        cur = self._mini_bench(hbm=200.0)
+        format_diff_table(diff_table(cur, base, 0.10))
+        text = capsys.readouterr().out
+        assert text.count("\n") == 9  # header + 8 metric rows
+        assert "FAIL" in text and "ok" in text
