@@ -358,6 +358,86 @@ def _lenet_e2e(csv=print) -> dict:
     }
 
 
+def _guard_overhead(csv=print) -> dict:
+    """Guarded-runtime cost (DESIGN.md §13): the LeNet e2e workload run
+    unguarded (jit fast path) vs under ``guarding()`` — the wall-clock
+    delta is ``guard_overhead_pct`` — plus the fallback counts of the
+    clean guarded run (all-clean expected) and of a squeezed run that
+    forces the replan rung.  All rows are ungated stats context: wall
+    clocks are never part of the regression gate."""
+    import jax
+
+    from repro.net.graph import lenet5
+    from repro.net.partition import auto_partition
+    from repro.net.runner import (
+        init_network_params,
+        prepare_network_params,
+        run_network,
+    )
+    from repro.robust import GuardConfig, guarding, inject
+
+    graph = lenet5()
+    master = init_network_params(graph, jax.random.PRNGKey(0))
+    plan = auto_partition(graph, batch=4)
+    params = prepare_network_params(plan, master)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 32, 1))
+
+    def plain():
+        logits, _ = run_network(x, params, plan=plan)
+        jax.block_until_ready(logits)
+
+    def guarded():
+        with guarding(GuardConfig(), source_params=master):
+            logits, _ = run_network(x, params, plan=plan)
+        jax.block_until_ready(logits)
+
+    stats_plain = _timed_stats_ms(plain)
+    stats_guard = _timed_stats_ms(guarded)
+    overhead_pct = (
+        (stats_guard["p50_ms"] - stats_plain["p50_ms"])
+        / stats_plain["p50_ms"] * 100.0
+    )
+
+    # clean-run fallback counts (expected empty) ...
+    with guarding(GuardConfig(), source_params=master) as guard:
+        logits, _ = run_network(x, params, plan=plan)
+        jax.block_until_ready(logits)
+    clean_counts = guard.last_report.fallback_counts()
+    clean = guard.last_report.clean_launches
+    launches = guard.last_report.launches
+
+    # ... and a squeezed run demonstrating the replan rung end to end
+    with guarding(GuardConfig(), source_params=master) as guard:
+        with inject(seed=0) as inj:
+            inj.squeeze_budget(0.002)
+            logits, _ = run_network(x, params, plan=plan)
+            jax.block_until_ready(logits)
+    squeezed_counts = guard.last_report.fallback_counts()
+
+    csv(
+        f"guard_overhead,lenet_e2e,plain,{stats_plain['p50_ms']:.1f},"
+        f"guarded,{stats_guard['p50_ms']:.1f},ms_per_batch4,"
+        f"overhead_pct,{overhead_pct:.1f}"
+    )
+    csv(
+        f"guard_fallbacks,lenet_e2e,clean,{clean}/{launches},"
+        f"counts,{clean_counts},squeezed_counts,{squeezed_counts}"
+    )
+    return {
+        "guard_overhead_pct": overhead_pct,
+        "plain_ms": stats_plain["p50_ms"],
+        "plain_stats": stats_plain,
+        "guarded_ms": stats_guard["p50_ms"],
+        "guarded_stats": stats_guard,
+        "wallclock_reps": WALLCLOCK_REPS,
+        "batch": 4,
+        "clean_launches": clean,
+        "launches": launches,
+        "fallback_counts": clean_counts,
+        "squeezed": {"factor": 0.002, "fallback_counts": squeezed_counts},
+    }
+
+
 def _kernel_micro(csv=print) -> dict:
     import jax
     import jax.numpy as jnp
@@ -491,6 +571,8 @@ def main(argv: list[str] | None = None) -> None:
         end_savings.run()
         print("== LeNet-5 end-to-end (run_network, interpret mode) ==")
         bench["workloads"]["lenet_e2e"] = _lenet_e2e()
+        print("== guarded runtime: overhead + fallback counts ==")
+        bench["workloads"]["guard_overhead"] = _guard_overhead()
         print("== kernels (interpret-mode wall time; TPU perf comes from the"
               " dry-run roofline) ==")
         bench["workloads"]["kernel_micro"] = _kernel_micro()

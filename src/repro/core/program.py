@@ -381,20 +381,28 @@ def compile_program(
     sets the byte width of every activation/weight the program accounts —
     window math is dtype-invariant, the byte and cycle models are not.
     """
+    from repro.robust.errors import PlanError
+
     levels = spec.levels
-    assert levels and levels[0].kind == "conv", (
-        "chain must start with a conv level"
-    )
+    if not (levels and levels[0].kind == "conv"):
+        raise PlanError(
+            "chain must start with a conv level",
+            levels=[lvl.kind for lvl in levels],
+        )
     for l, lvl in enumerate(levels):
-        if lvl.kind == "pool":
-            assert levels[l - 1].kind == "conv", (
-                "each pool level must directly follow a conv level"
+        if lvl.kind == "pool" and levels[l - 1].kind != "conv":
+            raise PlanError(
+                "each pool level must directly follow a conv level",
+                level=l, node=lvl.name,
             )
     sizes = spec.feature_sizes()
     out_size = sizes[-1]
-    assert out_size % out_region == 0, (
-        f"out_region {out_region} must tile the {out_size} output exactly"
-    )
+    if out_size % out_region != 0:
+        raise PlanError(
+            f"out_region {out_region} must tile the {out_size} output"
+            " exactly",
+            out_region=out_region, out_size=out_size,
+        )
     alpha = out_size // out_region
 
     win = compile_windows(spec, out_region).windows
@@ -763,7 +771,13 @@ def plan_launch(
     may climb back to resident (or from channel-tiled to plain streamed x2)
     at bfloat16 — the launched kernel then moves that dtype end to end.
     Returns ``None`` when no single launch fits."""
-    assert prefer_region in ("largest", "smallest")
+    if prefer_region not in ("largest", "smallest"):
+        from repro.robust.errors import PreflightError
+
+        raise PreflightError(
+            f"prefer_region must be 'largest' or 'smallest',"
+            f" got {prefer_region!r}"
+        )
     compute_dtype = canonical_dtype(compute_dtype)
     out_size = spec.feature_sizes()[-1]
     regions = [r for r in range(out_size, 0, -1) if out_size % r == 0]

@@ -105,9 +105,13 @@ def fused_pyramid(
         lp = plan_launch(
             spec, vmem_budget=vmem_budget, compute_dtype=compute_dtype
         )
-        assert lp is not None, (
-            "no output region fits VMEM; chunk via fused_pyramid_chain"
-        )
+        if lp is None:
+            from repro.robust.errors import BudgetError
+
+            raise BudgetError(
+                "no output region fits VMEM; chunk via fused_pyramid_chain",
+                vmem_budget=vmem_budget,
+            )
         out_region = lp.out_region
         if streamed is None:
             streamed = lp.streamed
@@ -155,11 +159,15 @@ def fused_pyramid(
         if stream
         else prog.vmem_bytes(x_slots, c_tiles)
     )
-    assert vmem <= vmem_budget, (
-        f"working set {vmem} exceeds VMEM"
-        + ("" if stream else "; retry with streamed weights or")
-        + " chunk via fused_pyramid_chain"
-    )
+    if vmem > vmem_budget:
+        from repro.robust.errors import BudgetError
+
+        raise BudgetError(
+            f"working set {vmem} exceeds VMEM"
+            + ("" if stream else "; retry with streamed weights or")
+            + " chunk via fused_pyramid_chain",
+            vmem_bytes=vmem, vmem_budget=vmem_budget,
+        )
     xp = jnp.pad(
         x.astype(cdt),
         ((0, 0), (prog.pad_lo, prog.pad_hi), (prog.pad_lo, prog.pad_hi), (0, 0)),
@@ -215,9 +223,13 @@ def fused_conv2(
 def conv_groups(spec: FusionSpec) -> list[list]:
     """Split the level chain into [conv + trailing pools] groups — the
     indivisible units of chunking (a pool executes as its conv's epilogue)."""
-    assert spec.levels and spec.levels[0].kind == "conv", (
-        "chain must start with a conv level"
-    )
+    if not (spec.levels and spec.levels[0].kind == "conv"):
+        from repro.robust.errors import PreflightError
+
+        raise PreflightError(
+            "chain must start with a conv level",
+            levels=[lvl.kind for lvl in spec.levels],
+        )
     groups: list[list] = []
     for lvl in spec.levels:
         if lvl.kind == "conv":
@@ -268,9 +280,12 @@ def plan_chunks(
                 cur = []
         if not cur and not fits(g):
             name = g[0].name or f"conv K={g[0].K} {g[0].n_in}->{g[0].n_out}"
-            raise ValueError(
+            from repro.robust.errors import BudgetError
+
+            raise BudgetError(
                 f"conv group [{name}] does not fit the {vmem_budget}-byte"
-                " VMEM budget even alone (streamed); chunking cannot help"
+                " VMEM budget even alone (streamed); chunking cannot help",
+                node=g[0].name, vmem_budget=vmem_budget,
             )
         cur = cur + g
     chunks.append(FusionSpec(levels=tuple(cur), input_size=size))
@@ -309,9 +324,12 @@ def fused_pyramid_chain(
         max_convs_per_chunk=max_convs_per_chunk,
         compute_dtype=compute_dtype,
     )
-    if out_regions is not None:
-        assert len(out_regions) == len(chunks), (
-            f"{len(out_regions)} out_regions for {len(chunks)} chunks"
+    if out_regions is not None and len(out_regions) != len(chunks):
+        from repro.robust.errors import PreflightError
+
+        raise PreflightError(
+            f"{len(out_regions)} out_regions for {len(chunks)} chunks",
+            out_regions=list(out_regions), chunks=len(chunks),
         )
     y = x
     skips = []

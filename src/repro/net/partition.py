@@ -39,8 +39,9 @@ from repro.core.fusion import FusionSpec
 from repro.core.program import VMEM_BUDGET_BYTES, LaunchPlan, plan_launch
 from repro.kernels.fused_conv.ops import conv_groups
 from repro.obs.trace import get_tracer
+from repro.robust.errors import BudgetError
 
-from .graph import Graph, Segment, fusable_segments
+from .graph import Graph, Segment, fusable_segments, infer_shapes
 
 INFEASIBLE = (float("inf"), float("inf"))
 
@@ -170,8 +171,9 @@ def partition_segment(
     move cut points and flip regimes relative to the f32 plan.
 
     ``max_convs`` caps pyramid depth (1 = the layer-by-layer baseline).
-    Raises ``ValueError`` when some single conv group fits no launch regime
-    even alone — no partition can execute that segment.
+    Raises :class:`repro.robust.errors.BudgetError` (a ``ValueError``) when
+    some single conv group fits no launch regime even alone — no partition
+    can execute that segment.
     """
     groups, bound_sizes, _ = _group_specs(segment)
     n = len(groups)
@@ -207,9 +209,10 @@ def partition_segment(
         bad = next(
             g for k, g in enumerate(groups) if cost[(k, k + 1)] == INFEASIBLE
         )
-        raise ValueError(
+        raise BudgetError(
             f"conv group [{bad[0].name or bad[0]}] fits no launch regime under"
-            f" the {vmem_budget}-byte VMEM budget; no partition can run it"
+            f" the {vmem_budget}-byte VMEM budget; no partition can run it",
+            node=bad[0].name, vmem_budget=vmem_budget,
         )
     cuts, j = [], n
     while j > 0:
@@ -262,6 +265,38 @@ def _segment_pyramids(
         li += n_levels
     assert li == len(segment.nodes), "launches must tile the segment"
     return out
+
+
+def replan_pyramid(
+    graph: Graph,
+    pyr: PyramidPlan,
+    *,
+    vmem_budget: int,
+    batch: int = 1,
+    compute_dtype: str = "float32",
+) -> list[PyramidPlan]:
+    """Re-cut one planned pyramid under a (smaller) VMEM budget.
+
+    The degradation ladder's replan rung (DESIGN.md §13): when a launch's
+    working set no longer fits at run time, its covered chain is rebuilt as
+    a :class:`~repro.net.graph.Segment` and re-run through the same DP —
+    tighter cuts, a chain of smaller launches, each individually under the
+    new budget.  Raises :class:`repro.robust.errors.BudgetError` when even
+    single conv groups cannot fit, i.e. this rung is exhausted.
+    """
+    shapes = infer_shapes(graph)
+    src = graph.node(pyr.node_names[0]).inputs[0]
+    seg = Segment(
+        nodes=tuple(graph.node(m) for m in pyr.node_names),
+        input_size=shapes[src].size,
+        in_channels=shapes[src].channels,
+        relu=pyr.relu,
+    )
+    launches = partition_segment(
+        seg, vmem_budget=vmem_budget, batch=batch,
+        compute_dtype=compute_dtype,
+    )
+    return _segment_pyramids(seg, launches)
 
 
 @functools.lru_cache(maxsize=128)
@@ -471,9 +506,10 @@ def paper_partition(
             lp = _span_launch(groups, bound_sizes, i, j, vmem_budget,
                               compute_dtype=cdt)
             if lp is None:
-                raise ValueError(
+                raise BudgetError(
                     f"paper fusion group {i}:{j} of segment {si} does not fit"
-                    f" the {vmem_budget}-byte VMEM budget"
+                    f" the {vmem_budget}-byte VMEM budget",
+                    vmem_budget=vmem_budget,
                 )
             launches.append(lp)
         pyramids.extend(_segment_pyramids(seg, launches))

@@ -37,6 +37,7 @@ from repro.core.cycle_model import DEFAULT_PARAMS
 from repro.core.dtypes import canonical_dtype, jnp_dtype
 from repro.kernels.fused_conv.ops import flatten_weights, fused_pyramid
 from repro.obs.trace import LaunchSpan, get_tracer
+from repro.robust.guard import get_guard
 
 from .graph import Graph, Node, infer_shapes
 from .partition import PartitionPlan, auto_partition
@@ -109,7 +110,7 @@ def _pool_node(x, n: Node):
     )
 
 
-def _head_op(values, n: Node, params: Params):
+def _head_op(values, n: Node, params: Params, graph: Graph | None = None):
     if n.op == "relu":
         return jax.nn.relu(values[n.inputs[0]])
     if n.op == "add":
@@ -131,7 +132,15 @@ def _head_op(values, n: Node, params: Params):
         ) + b
         out = jax.nn.relu(out) if n.relu else out
         return out.astype(x.dtype)
-    raise AssertionError(f"unhandled op {n.op}")
+    from repro.robust.errors import PreflightError
+
+    raise PreflightError(
+        f"node {n.name!r} has op {n.op!r}, which the runner cannot execute"
+        " (expected one of relu/add/global_pool/flatten/dense outside"
+        " pyramids)",
+        node=n.name, op=n.op,
+        graph=graph.name if graph is not None else None,
+    )
 
 
 def reference_network(x: jnp.ndarray, graph: Graph, params: Params) -> jnp.ndarray:
@@ -146,7 +155,7 @@ def reference_network(x: jnp.ndarray, graph: Graph, params: Params) -> jnp.ndarr
         elif n.op == "pool":
             values[n.name] = _pool_node(values[n.inputs[0]], n)
         else:
-            values[n.name] = _head_op(values, n, params)
+            values[n.name] = _head_op(values, n, params, graph)
     return values[graph.output.name]
 
 
@@ -193,11 +202,14 @@ def _forward(
     cdt: str,
     launch_wrapper=None,
 ) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
-    """The plan-driven forward loop, shared by the jit fast path and the
-    traced eager path.  ``launch_wrapper(pyr, call)``, when given, wraps
-    each fused-pyramid launch (the traced path times it there); the jit
-    path passes ``None`` so tracing support adds nothing to the compiled
-    graph."""
+    """The plan-driven forward loop, shared by the jit fast path, the
+    traced eager path, and the guarded eager path.
+    ``launch_wrapper(pyr, call, x_in)``, when given, wraps each
+    fused-pyramid launch — the traced path times it there, the guarded path
+    (``repro.robust.degrade``) runs its degradation ladder there, using
+    ``x_in`` (the launch input) for replans and reference quarantines and
+    ``call(interpret=True)``-style keyword overrides for retries.  The jit
+    path passes ``None`` so neither adds anything to the compiled graph."""
     jdt = jnp_dtype(cdt)
     graph = plan.graph
     covered = plan.covered()
@@ -211,16 +223,11 @@ def _forward(
             conv_names = [m for m in pyr.node_names
                           if graph.node(m).op == "conv"]
             flat = params.get(_FLAT + pyr.name)
+            x_in = values[n.inputs[0]]
 
-            def call(pyr=pyr, n=n, conv_names=conv_names, flat=flat):
-                return fused_pyramid(
-                    values[n.inputs[0]],
-                    # streamed launches with pre-flattened weights don't
-                    # need the per-level tensors threaded through the jit
-                    # graph
-                    None if flat is not None
-                    else [params[m][0] for m in conv_names],
-                    [params[m][1] for m in conv_names],
+            def call(pyr=pyr, x_in=x_in, conv_names=conv_names, flat=flat,
+                     **overrides):
+                kwargs = dict(
                     spec=pyr.spec,
                     out_region=pyr.launch.out_region,
                     streamed=pyr.launch.streamed,
@@ -236,9 +243,22 @@ def _forward(
                     weights_flat=flat,
                     compute_dtype=cdt,
                 )
+                # wrapper retries may override launch knobs, e.g.
+                # call(interpret=True) on the degradation ladder
+                kwargs.update(overrides)
+                return fused_pyramid(
+                    x_in,
+                    # streamed launches with pre-flattened weights don't
+                    # need the per-level tensors threaded through the jit
+                    # graph
+                    None if kwargs["weights_flat"] is not None
+                    else [params[m][0] for m in conv_names],
+                    [params[m][1] for m in conv_names],
+                    **kwargs,
+                )
 
             y, skip = call() if launch_wrapper is None else launch_wrapper(
-                pyr, call
+                pyr, call, x_in
             )
             values[pyr.node_names[-1]] = y
             skips[pyr.name] = skip
@@ -250,7 +270,7 @@ def _forward(
         elif n.op == "pool":
             values[n.name] = _pool_node(values[n.inputs[0]], n)
         else:
-            values[n.name] = _head_op(values, n, params)
+            values[n.name] = _head_op(values, n, params, graph)
     return values[graph.output.name], skips
 
 
@@ -284,7 +304,7 @@ def _run_network_traced(
     model = plan.graph.name
     batch = int(x.shape[0])
 
-    def wrapper(pyr, call):
+    def wrapper(pyr, call, x_in):
         t0 = time.perf_counter()
         y, skip = call()
         jax.block_until_ready((y, skip))
@@ -375,7 +395,22 @@ def run_network(
     With the default no-op tracer the whole forward goes through the
     unchanged jit fast path — the only extra work is this one ``enabled``
     check, *outside* jit, so tracing-off costs nothing per call.
+
+    Guarded execution (DESIGN.md §13): with a guard installed
+    (``repro.robust.guarding()``) the forward instead runs the preflighted,
+    sentinel-checked degradation-ladder path of
+    :func:`repro.robust.degrade.run_network_guarded`.  Like tracing, the
+    guard is one static ``enabled`` check outside jit — guards off leaves
+    the jit fast path byte-identical.
     """
+    guard = get_guard()
+    if guard.enabled:
+        from repro.robust.degrade import run_network_guarded
+
+        return run_network_guarded(
+            x, params, plan=plan, end_skip=end_skip, interpret=interpret,
+            dtype=dtype, guard=guard,
+        )
     tracer = get_tracer()
     if not tracer.enabled:
         return _run_network_jit(

@@ -11,6 +11,11 @@ headroom, modeled cycles), and optionally:
 * ``--run`` — execute the plan with tracing enabled (one warm-up then
   ``--reps`` traced forwards) and print the model-vs-measured drift table
   (:mod:`repro.obs.report`).
+* ``--guard`` — execute the plan under the guarded runtime
+  (:mod:`repro.robust`, DESIGN.md §13) and print the fallback table: which
+  launches ran clean and which rung of the degradation ladder each
+  degraded launch took.  ``--squeeze F`` simulates VMEM pressure (budget
+  scaled by F) so the replan rung is demonstrable from the CLI.
 
 Examples::
 
@@ -18,6 +23,8 @@ Examples::
     PYTHONPATH=src python -m repro.obs.explain --model lenet --trace t.json
     PYTHONPATH=src python -m repro.obs.explain --model resnet18 \\
         --dtype bfloat16 --run --trace t.json
+    PYTHONPATH=src python -m repro.obs.explain --model lenet \\
+        --guard --squeeze 0.002
 
 Big models default to the same reduced interpret-friendly input sizes as
 ``examples/fused_cnn_inference.py`` when run; the *plan table* is always
@@ -70,6 +77,31 @@ def plan_table(plan, vmem_budget: int, out=print) -> None:
     )
 
 
+def fallback_table(report, out=print) -> None:
+    """Render a guarded run's :class:`~repro.robust.degrade.RunReport`:
+    one row per fallback event, plus the degraded-plan detail (the chained
+    sub-launches a replan substituted for the planned launch)."""
+    out(
+        f"guarded: {report.clean_launches}/{report.launches} launches clean"
+        + (
+            f", fallbacks {report.fallback_counts()}"
+            if report.degraded else ", no fallbacks"
+        )
+    )
+    if not report.degraded:
+        return
+    out(f"{'launch':<26} {'rung':<12} reason")
+    for e in report.events:
+        out(f"{e.launch:<26} {e.rung:<12} {e.reason}")
+        subs = e.detail.get("sub_launches")
+        if subs:
+            out(
+                f"{'':<26} {'':<12} degraded plan: "
+                + " -> ".join(subs)
+                + f" (budget {_fmt_bytes(e.detail['budget'])})"
+            )
+
+
 def main(argv: list[str] | None = None) -> int:
     from repro.core.program import VMEM_BUDGET_BYTES
     from repro.net.graph import MODELS
@@ -95,10 +127,17 @@ def main(argv: list[str] | None = None) -> int:
                          "model-vs-measured drift")
     ap.add_argument("--reps", type=int, default=3,
                     help="traced forwards after the warm-up (with --run)")
+    ap.add_argument("--guard", action="store_true",
+                    help="execute the plan under the guarded runtime and "
+                         "print the fallback table (DESIGN.md §13)")
+    ap.add_argument("--squeeze", type=float, default=None, metavar="F",
+                    help="with --guard: simulate VMEM pressure by scaling "
+                         "the budget by F (0 < F <= 1) via the fault "
+                         "injector, demonstrating the replan rung")
     args = ap.parse_args(argv)
 
     size = args.input_size
-    if size is None and args.run:
+    if size is None and (args.run or args.guard):
         size = RUN_SIZE[args.model]
     kwargs = {"compute_dtype": args.dtype}
     if size is not None:
@@ -119,6 +158,39 @@ def main(argv: list[str] | None = None) -> int:
         f"partition cache: {info.hits} hits / {info.misses} misses "
         f"({info.currsize} plans cached)"
     )
+
+    if args.guard:
+        import contextlib
+
+        import jax
+
+        from repro.net.runner import (
+            init_network_params,
+            prepare_network_params,
+            run_network,
+        )
+        from repro.robust import GuardConfig, guarding, inject
+
+        master = init_network_params(graph, jax.random.PRNGKey(0))
+        params = prepare_network_params(plan, master)
+        x = jax.random.normal(
+            jax.random.PRNGKey(1),
+            (args.batch, graph.input_size, graph.input_size,
+             graph.in_channels),
+        )
+        squeeze = contextlib.nullcontext()
+        if args.squeeze is not None:
+            squeeze = inject(seed=0)
+        print("\nguarded run"
+              + (f" (VMEM squeezed x{args.squeeze})" if args.squeeze
+                 is not None else ""))
+        with guarding(GuardConfig(), source_params=master) as guard:
+            with squeeze as inj:
+                if inj is not None:
+                    inj.squeeze_budget(args.squeeze)
+                logits, _ = run_network(x, params, plan=plan)
+        jax.block_until_ready(logits)
+        fallback_table(guard.last_report)
 
     collector = None
     if args.run:

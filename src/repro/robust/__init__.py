@@ -1,0 +1,86 @@
+"""Guarded inference runtime: preflight validation, numeric sentinels, a
+graceful-degradation ladder, and deterministic fault injection.
+
+The fused-pyramid path is planned by models and executed by one jit graph —
+fast, but brittle: a bad input, a NaN-poisoned weight, a VMEM miss, or a
+lowering failure surfaces as an opaque deep traceback.  This package wraps
+``run_network`` end to end (DESIGN.md §13):
+
+* :mod:`repro.robust.errors` — the typed error hierarchy
+  (:class:`PreflightError`, :class:`BudgetError`, :class:`NumericError`,
+  ...) every other layer raises instead of bare asserts.
+* :mod:`repro.robust.validate` — :func:`preflight`: structural checks on
+  graph/params/inputs (shape, dtype, channel chaining, finite params,
+  plan-vs-budget headroom) before any launch.
+* :mod:`repro.robust.guard` — the process-global guard flag
+  (:func:`guarding` mirrors ``repro.obs.tracing``: off by default, one
+  static check outside jit) plus the jit-compatible per-launch numeric
+  sentinels.
+* :mod:`repro.robust.degrade` — :func:`run_network_guarded`: the
+  degradation ladder.  Compile/lowering failure retries ``interpret=True``;
+  a budget violation replans the pyramid under a shrunken budget (tighter
+  cuts, chained launches); a numeric fault quarantines the launch to the
+  node-by-node reference segment.  Every fallback is recorded in the
+  returned :class:`RunReport` and as an ``obs`` trace event.
+* :mod:`repro.robust.faults` — the seeded fault-injection harness the chaos
+  suite uses to prove every rung terminates at the reference path.
+
+Only :mod:`repro.robust.errors` is imported eagerly (it is dependency-free
+and ``repro.core`` raises from it); everything else loads lazily so
+``import repro.core.program`` cannot recurse back through this package.
+"""
+
+from .errors import (
+    BudgetError,
+    FaultInjected,
+    NumericError,
+    PlanError,
+    PreflightError,
+    RobustError,
+)
+
+_LAZY = {
+    "preflight": "validate",
+    "GuardConfig": "guard",
+    "get_guard": "guard",
+    "guarding": "guard",
+    "sentinel_stats": "guard",
+    "FallbackEvent": "degrade",
+    "RunReport": "degrade",
+    "run_network_guarded": "degrade",
+    "FaultInjector": "faults",
+    "corrupt_params": "faults",
+    "get_injector": "faults",
+    "inject": "faults",
+}
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        mod = importlib.import_module(f".{_LAZY[name]}", __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = [
+    "BudgetError",
+    "FallbackEvent",
+    "FaultInjected",
+    "FaultInjector",
+    "GuardConfig",
+    "NumericError",
+    "PlanError",
+    "PreflightError",
+    "RobustError",
+    "RunReport",
+    "corrupt_params",
+    "get_guard",
+    "get_injector",
+    "guarding",
+    "inject",
+    "preflight",
+    "run_network_guarded",
+    "sentinel_stats",
+]

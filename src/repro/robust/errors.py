@@ -1,0 +1,76 @@
+"""Typed error hierarchy of the guarded inference runtime.
+
+Every failure mode the fused-pyramid path can hit is classified here so
+callers (and the degradation ladder in :mod:`repro.robust.degrade`) can
+dispatch on *what went wrong* instead of parsing a traceback:
+
+* :class:`PreflightError` — the request itself is malformed: shapes, dtypes,
+  missing or mis-prepared params, plan/graph disagreement.  Subclasses
+  ``ValueError`` because that is what the structural validators historically
+  raised — existing ``except ValueError`` call sites keep working.
+* :class:`PlanError` — a plan-construction contract was violated (a chain
+  that does not start with a conv, an output region that does not tile the
+  map).  A :class:`PreflightError` subclass: a broken plan is a broken
+  request.
+* :class:`BudgetError` — a working set does not fit the VMEM budget (at plan
+  time or at launch time).  Also a ``ValueError`` subclass for the same
+  compatibility reason.  The degradation ladder answers this rung by
+  replanning under a shrunken budget.
+* :class:`NumericError` — non-finite or out-of-magnitude values: poisoned
+  weights at preflight, a NaN/Inf launch output caught by a runtime
+  sentinel.  Subclasses ``FloatingPointError``.  Carries the offending
+  ``nodes`` / ``launch`` / ``level`` so the fault is localized, not just
+  detected.
+* :class:`FaultInjected` — raised only by the deterministic fault harness
+  (:mod:`repro.robust.faults`); never by production code.
+
+This module is import-light on purpose (stdlib only): ``repro.core`` and
+``repro.kernels`` raise these errors, and the heavy robust modules import
+those packages back — keeping the hierarchy dependency-free breaks the
+cycle.
+"""
+
+from __future__ import annotations
+
+
+class RobustError(Exception):
+    """Base of every typed error the guarded runtime raises.
+
+    ``context`` keys (node, launch, stage, ...) ride along machine-readable;
+    the message is built once so ``str(e)`` shows them too.
+    """
+
+    def __init__(self, message: str, **context):
+        self.context = context
+        if context:
+            detail = ", ".join(f"{k}={v!r}" for k, v in context.items())
+            message = f"{message} [{detail}]"
+        super().__init__(message)
+
+
+class PreflightError(RobustError, ValueError):
+    """The request is structurally invalid: shape/dtype/param/plan
+    disagreement caught before any kernel launch."""
+
+
+class PlanError(PreflightError):
+    """A plan-construction contract was violated (tile-program compiler or
+    launch-planner preconditions)."""
+
+
+class BudgetError(RobustError, ValueError):
+    """A working set (or every candidate launch regime) exceeds the VMEM
+    budget.  The degradation ladder replans under a shrunken budget; direct
+    callers see which launch/spec failed via ``context``."""
+
+
+class NumericError(RobustError, FloatingPointError):
+    """Non-finite (or out-of-magnitude) values detected — in params at
+    preflight (``context['nodes']``) or in a launch output by a runtime
+    sentinel (``context['launch']`` / ``context['level']``)."""
+
+
+class FaultInjected(RobustError, RuntimeError):
+    """An exception planted by the deterministic fault-injection harness
+    (:mod:`repro.robust.faults`).  ``context['stage']`` names the stage it
+    fired at (``plan`` / ``compile`` / ``run``)."""

@@ -1,0 +1,142 @@
+"""Runtime guard flag and numeric sentinels.
+
+The guard mirrors the PR 7 tracer exactly (``repro.obs.trace``): a
+process-global object whose ``enabled`` attribute is the *one* check
+``run_network`` makes, outside jit, before dispatching.  With the default
+:data:`NULL_GUARD` the jit fast path is byte-identical to the unguarded
+runner — guards off cost one attribute load per call and nothing inside the
+compiled graph.  Enable with::
+
+    from repro.robust import GuardConfig, guarding
+
+    with guarding(GuardConfig()) as guard:
+        logits, skips = run_network(x, params, plan=plan)
+    print(guard.last_report.summary())
+
+The sentinels themselves (:func:`sentinel_stats`) are cheap jit-compatible
+reductions — an all-finite flag and the max magnitude of a launch output —
+evaluated per launch by the guarded runner so a NaN/Inf is localized to the
+offending launch (and, via the reference walk in
+:mod:`repro.robust.degrade`, to the offending level) instead of surfacing
+as poisoned logits three launches later.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class GuardConfig:
+    """Static knobs of the guarded runtime.
+
+    ``magnitude_limit`` — max ``|value|`` a launch output may carry before
+    the numeric sentinel trips (``None`` = finiteness only).  A tight limit
+    turns slow overflow into a quarantined launch instead of inf logits.
+
+    ``max_replans`` — bounded retry count of the budget rung: each retry
+    shrinks the effective VMEM budget by ``budget_shrink`` and replans the
+    failing pyramid (tighter cuts, chained launches) before giving up to the
+    reference path.
+
+    ``preflight`` / ``sentinel`` — toggle the validation pass and the
+    per-launch numeric checks independently (both on by default when
+    guarding is enabled at all).
+
+    ``heal_params`` — when the preflight finds non-finite params and
+    ``guarding(..., source_params=...)`` supplied a clean master copy,
+    rebuild the prepared params from it once instead of raising.
+    """
+
+    magnitude_limit: float | None = None
+    max_replans: int = 2
+    budget_shrink: float = 0.5
+    preflight: bool = True
+    sentinel: bool = True
+    heal_params: bool = True
+
+
+class GuardRuntime:
+    """An installed guard: config + the clean param source (for healing)
+    + the last run's :class:`~repro.robust.degrade.RunReport`."""
+
+    enabled = True
+
+    def __init__(self, config: GuardConfig | None = None, source_params=None):
+        self.config = config if config is not None else GuardConfig()
+        self.source_params = source_params
+        self.last_report = None
+
+
+class _NullGuard:
+    """Guards off: ``run_network`` sees ``enabled = False`` and takes the
+    unchanged jit fast path."""
+
+    enabled = False
+    config = GuardConfig()
+    source_params = None
+    last_report = None
+
+
+NULL_GUARD = _NullGuard()
+
+_guard = NULL_GUARD
+
+
+def get_guard():
+    """The process-global guard: :data:`NULL_GUARD` unless a
+    :class:`GuardRuntime` was installed via :func:`guarding`."""
+    return _guard
+
+
+def set_guard(guard) -> None:
+    """Install ``guard`` globally (``None`` restores the off default)."""
+    global _guard
+    _guard = NULL_GUARD if guard is None else guard
+
+
+@contextlib.contextmanager
+def guarding(config: GuardConfig | None = None, *, source_params=None):
+    """Scope a :class:`GuardRuntime` as the process guard; yields it.
+
+    ``source_params`` is the clean (master, f32) params dict used to heal
+    corrupted prepared params at preflight.  Nesting restores the previous
+    guard on exit, like ``repro.obs.tracing``.
+    """
+    rt = GuardRuntime(config, source_params)
+    prev = get_guard()
+    set_guard(rt)
+    try:
+        yield rt
+    finally:
+        set_guard(prev)
+
+
+def sentinel_stats(y) -> dict:
+    """The per-launch numeric sentinel: jit-compatible scalar reductions.
+
+    Returns ``{"finite": all-finite bool, "max_abs": max |y|}`` as 0-d jnp
+    arrays — two cheap reductions over a tile the launch just produced, so
+    running them guarded adds one pass over data already in cache.  The
+    guarded runner hosts-reads them per launch (it is eager by
+    construction); jit callers can fold them into a compiled graph
+    unchanged.
+    """
+    import jax.numpy as jnp
+
+    yf = y.astype(jnp.float32)
+    return {
+        "finite": jnp.all(jnp.isfinite(yf)),
+        "max_abs": jnp.max(jnp.abs(yf)),
+    }
+
+
+def sentinel_trips(stats: dict, magnitude_limit: float | None) -> str | None:
+    """Classify host-side sentinel stats: ``None`` when clean, else a short
+    reason string (``"non-finite"`` / ``"magnitude"``)."""
+    if not bool(stats["finite"]):
+        return "non-finite"
+    if magnitude_limit is not None and float(stats["max_abs"]) > magnitude_limit:
+        return "magnitude"
+    return None

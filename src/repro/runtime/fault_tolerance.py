@@ -65,7 +65,7 @@ class FaultTolerantCluster:
 
 @dataclass(frozen=True)
 class RestartPlan:
-    kind: str  # "same_size" | "elastic_downsize"
+    kind: str  # "same_size" | "elastic_downsize" | "halt"
     mesh_shape: tuple[int, ...]
     restore_step: int | None
     replay_from: int | None  # first data step to re-consume
@@ -83,7 +83,11 @@ def plan_restart(
 
     The model axis is preserved (param sharding must stay valid);
     the data axis shrinks to the largest power-of-two that the surviving
-    hosts support when no spares can backfill.
+    hosts support when no spares can backfill.  When the survivors cannot
+    hold even one model replica (``capacity < model_ax``) no downsized mesh
+    exists: the plan is an explicit ``"halt"`` (empty mesh, checkpoint
+    preserved for a later restart) rather than a bogus 1-replica mesh the
+    cluster cannot actually place.
     """
     data_ax, model_ax = base_mesh
     needed = data_ax * model_ax // hosts_per_replica
@@ -94,8 +98,18 @@ def plan_restart(
             restore_step=latest_checkpoint,
             replay_from=None if latest_checkpoint is None else latest_checkpoint + 1,
         )
-    # elastic: shrink data axis to the largest feasible power of two
     capacity = alive_hosts * hosts_per_replica
+    if capacity < model_ax:
+        # infeasible: not enough surviving chips for one model replica —
+        # halt and wait for backfill instead of planning a mesh that the
+        # elastic loop below would silently report as (1, model_ax)
+        return RestartPlan(
+            kind="halt",
+            mesh_shape=(0, model_ax),
+            restore_step=latest_checkpoint,
+            replay_from=None,
+        )
+    # elastic: shrink data axis to the largest feasible power of two
     new_data = 1
     while new_data * 2 * model_ax <= capacity:
         new_data *= 2

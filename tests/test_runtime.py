@@ -160,6 +160,41 @@ class TestFaultTolerance:
         assert data_ax * model_ax <= 20 * 8
         assert data_ax & (data_ax - 1) == 0  # power of two
 
+    def test_halt_when_no_model_replica_fits(self):
+        """Survivors can't hold even one model replica: the plan must be an
+        explicit halt, not a bogus (1, model_ax) mesh the cluster cannot
+        place (capacity 8 chips < model axis 16)."""
+        plan = plan_restart(
+            alive_hosts=1, hosts_per_replica=8, base_mesh=(16, 16),
+            spare_hosts=0, latest_checkpoint=700,
+        )
+        assert plan.kind == "halt"
+        assert plan.mesh_shape == (0, 16)
+        assert plan.restore_step == 700  # checkpoint kept for backfill
+        assert plan.replay_from is None  # nothing will consume data
+
+    def test_elastic_boundary_exactly_one_replica(self):
+        """capacity == model_ax is the smallest feasible elastic mesh:
+        exactly one data replica, not a halt."""
+        plan = plan_restart(
+            alive_hosts=2, hosts_per_replica=8, base_mesh=(16, 16),
+            spare_hosts=0, latest_checkpoint=None,
+        )
+        assert plan.kind == "elastic_downsize"
+        assert plan.mesh_shape == (1, 16)
+        assert plan.replay_from is None
+
+    def test_heartbeat_revives_marked_host(self):
+        t = [0.0]
+        cluster = FaultTolerantCluster(n_hosts=2, timeout_s=5,
+                                       clock=lambda: t[0])
+        t[0] = 10.0
+        cluster.heartbeat(0)
+        assert cluster.check() == [1]
+        cluster.heartbeat(1)  # late beat: the host is back
+        assert cluster.check() == []
+        assert cluster.alive_count == 2
+
     def test_elastic_restore_resharding(self):
         """A checkpoint saved under one mesh restores onto a smaller one."""
         with tempfile.TemporaryDirectory() as d:
@@ -196,6 +231,37 @@ class TestStraggler:
             times = list(1.0 + 0.02 * rng.standard_normal(8))
             bad.update(det.observe(times))
         assert not bad
+
+    def test_mitigations_escalate_in_order(self):
+        """A persistent slow host walks the ladder: rebalance first, then
+        exclude-at-next-rescale once patience runs out."""
+        det = StragglerDetector(n_hosts=4, patience=4)
+        seen = []
+        for step in range(12):
+            times = [1.0, 1.0, 1.0, 1.0]
+            if step >= 2:
+                times[1] = 1.8  # slow but under hard_ratio * fleet mean
+            for host, action in det.observe(times).items():
+                assert host == 1
+                seen.append(action)
+        assert "rebalance_input" in seen
+        assert "exclude_next_rescale" in seen
+        assert "immediate_restart" not in seen
+        assert seen.index("rebalance_input") < seen.index(
+            "exclude_next_rescale"
+        )
+
+    def test_hard_straggler_restarts(self):
+        """A 4x slowdown (past hard_ratio of the fleet mean) escalates to
+        immediate restart once patience is exhausted."""
+        det = StragglerDetector(n_hosts=4, patience=3)
+        decisions = {}
+        for step in range(10):
+            times = [1.0, 1.0, 1.0, 1.0]
+            if step >= 2:
+                times[3] = 4.0
+            decisions.update(det.observe(times))
+        assert decisions.get(3) == "immediate_restart"
 
 
 class TestGradCompression:

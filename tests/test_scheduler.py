@@ -68,3 +68,48 @@ class TestScheduler:
             s.tick()
         assert s.preempted >= 1
         assert 1 in s.completed
+
+    def test_no_preemption_below_token_threshold(self):
+        """A request that has not yet generated preempt_after tokens is not
+        a preemption victim, even with a starving queue — eviction would
+        waste more recompute than it frees."""
+        s = BatchScheduler(n_slots=1, max_seq=100_000,
+                           preempt_after=500, max_wait_steps=5)
+        s.submit(Request(rid=0, prompt_len=4, max_new_tokens=50_000))
+        s.admit()
+        s.submit(Request(rid=1, prompt_len=4, max_new_tokens=4))
+        for _ in range(100):  # well past max_wait_steps, short of 500 tokens
+            s.admit()
+            s.tick()
+        assert s.preempted == 0
+        assert 1 not in s.completed
+
+    def test_preempted_request_recomputes_from_zero(self):
+        """Preemption discards generation state (deterministic recompute):
+        the victim re-runs its full budget after re-admission and still
+        completes."""
+        s = BatchScheduler(n_slots=1, max_seq=100_000,
+                           preempt_after=10, max_wait_steps=5)
+        s.submit(Request(rid=0, prompt_len=4, max_new_tokens=30))
+        s.admit()
+        for _ in range(15):
+            s.tick()
+        s.submit(Request(rid=1, prompt_len=4, max_new_tokens=2))
+        for _ in range(200):
+            if 0 in s.completed:
+                break
+            s.admit()
+            s.tick()
+        assert s.preempted >= 1
+        assert sorted(s.completed) == [0, 1]
+
+    def test_cohort_reports_positions_post_admission(self):
+        """tick() returns {slot: position} for every active slot; two
+        same-length prompts admitted together batch at the same position."""
+        s = BatchScheduler(n_slots=2, max_seq=64)
+        s.submit(Request(rid=0, prompt_len=6, max_new_tokens=4))
+        s.submit(Request(rid=1, prompt_len=6, max_new_tokens=4))
+        s.admit()
+        cohort = s.tick()
+        assert sorted(cohort) == [0, 1]
+        assert cohort[0] == cohort[1] == 6
