@@ -17,7 +17,11 @@ metric *regresses* by more than ``--tolerance`` (default 10%):
   resident back to streamed) fails CI just like an f32 regression;
 * ``partition.<model>.<strategy>`` for ``auto`` and ``auto_bf16``:
   ``hbm_bytes``, ``modeled_latency_us`` — the auto-partitioner's
-  whole-network plan quality for every zoo model at both compute dtypes.
+  whole-network plan quality for every zoo model at both compute dtypes;
+* ``serving.<model>.buckets.bucket<N>``: ``modeled_cycles``, ``slo_us`` —
+  the batch-aware plan cost and published cold-latency SLO of every
+  serving bucket (DESIGN.md §14), so a ladder change that slows a bucket's
+  plan fails CI even though the measured sweep never gates.
 
 The launch rows also carry ungated context columns (``c_tiles``,
 ``k_pipeline_cycles_saved``, ``pipeline_cycles_saved``) so the committed
@@ -51,6 +55,7 @@ LAUNCH_METRICS = (
 )
 PARTITION_METRICS = ("hbm_bytes", "modeled_latency_us")
 PARTITION_STRATEGIES = ("auto", "auto_bf16")
+SERVING_METRICS = ("modeled_cycles", "slo_us")
 
 
 def gated_metrics(bench: dict) -> dict[str, float]:
@@ -67,6 +72,11 @@ def gated_metrics(bench: dict) -> dict[str, float]:
                     out[f"partition/{model}/{strategy}/{m}"] = float(
                         rows[strategy][m]
                     )
+    for model, rows in bench.get("serving", {}).items():
+        for bname, row in rows.get("buckets", {}).items():
+            for m in SERVING_METRICS:
+                if m in row:
+                    out[f"serving/{model}/{bname}/{m}"] = float(row[m])
     return out
 
 
@@ -162,6 +172,12 @@ def main(argv: list[str] | None = None) -> int:
             "partition": {
                 model: {s: rows[s] for s in PARTITION_STRATEGIES}
                 for model, rows in bench["partition"].items()
+            },
+            # analytic bucket rows only: the measured sweep is wall-clock
+            # noise and never gates
+            "serving": {
+                model: {"buckets": rows["buckets"]}
+                for model, rows in bench.get("serving", {}).items()
             },
         }
         with open(args.baseline, "w") as f:

@@ -729,7 +729,16 @@ class LaunchPlan:
         (``x_slots=1``) pays ``(input_dma + body) * cells``; the revolving
         cross-cell prefetch (``x_slots=2``) pays
         ``warmup_fill + body + (cells - 1) * max(body, input_dma)`` — never
-        worse than serial, equal at ``alpha == 1`` (no successor cell)."""
+        worse than serial, equal at ``alpha == 1`` (no successor cell).
+
+        ``batch`` multiplies the per-image grid (the batch grid axis is
+        ``parallel`` across cores but sequential within one, and the
+        prefetch chain resets at batch boundaries, so each element pays its
+        own warm-up fill).  The byte models scale differently in batch —
+        resident weights are read once per launch, streamed weights once per
+        cell per element — which is why the partitioner's cut points shift
+        with the serving bucket (see :func:`plan_launch` and DESIGN.md §14).
+        """
         from .cycle_model import grid_pipeline_cycles
 
         per_image = grid_pipeline_cycles(
@@ -740,11 +749,19 @@ class LaunchPlan:
         )
         return batch * per_image
 
+    def modeled_us(self, batch: int = 1) -> float:
+        """:meth:`modeled_cycles` at the cycle model's reference frequency —
+        the per-launch share of a serving bucket's latency SLO estimate."""
+        from .cycle_model import DEFAULT_PARAMS
+
+        return self.modeled_cycles(batch) / DEFAULT_PARAMS.freq_mhz
+
 
 def plan_launch(
     spec: FusionSpec,
     vmem_budget: int = VMEM_BUDGET_BYTES,
     *,
+    batch: int = 1,
     allow_stream: bool = True,
     prefer_region: str = "largest",
     compute_dtype="float32",
@@ -770,6 +787,16 @@ def plan_launch(
     that dtype's byte widths, so a chain that busts VMEM resident at float32
     may climb back to resident (or from channel-tiled to plain streamed x2)
     at bfloat16 — the launched kernel then moves that dtype end to end.
+
+    ``batch`` is the costing scale: within a rung the plan knobs are chosen
+    by ``modeled_cycles(batch)`` at the batch the launch will actually run
+    (the serving engine plans per bucket).  The rung *order* needs no batch
+    argument — resident weights are read once per launch while streamed
+    re-reads scale with ``batch * alpha^2``, so the ladder is cost-monotone
+    at every batch — but the batch still decides plans globally through the
+    partitioner, which compares whole cut points at the bucket batch and
+    shifts toward fewer, weight-resident launches as batch grows (weight
+    loads amortize across the batch; activation traffic does not).
     Returns ``None`` when no single launch fits."""
     if prefer_region not in ("largest", "smallest"):
         from repro.robust.errors import PreflightError
@@ -787,36 +814,52 @@ def plan_launch(
     def x_options(prog: TileProgram) -> tuple[int, ...]:
         return (1,) if prog.alpha == 1 else (2, 1)
 
+    def pick_x(prog: TileProgram, build) -> LaunchPlan | None:
+        """Cheapest feasible input-buffer knob of one rung, costed at
+        ``batch``: ``build(xs)`` returns the rung's plan at ``x_slots=xs``
+        or None when it busts VMEM.  The prefetch pipeline is never modeled
+        slower than serial at any batch; on a tie keep the extra landing
+        slot (the historical ladder's preference)."""
+        cands = [p for p in (build(xs) for xs in x_options(prog)) if p]
+        if not cands:
+            return None
+        return min(cands, key=lambda p: (p.modeled_cycles(batch), -p.x_slots))
+
+    def feasible(plan: LaunchPlan) -> LaunchPlan | None:
+        return plan if plan.vmem_bytes() <= vmem_budget else None
+
     for r in regions:
         prog = compile_program(spec, r, compute_dtype=compute_dtype)
-        for xs in x_options(prog):
-            if prog.vmem_bytes(xs) <= vmem_budget:
-                return LaunchPlan(program=prog, streamed=False, x_slots=xs)
+        plan = pick_x(
+            prog,
+            lambda xs, prog=prog: feasible(
+                LaunchPlan(program=prog, streamed=False, x_slots=xs)
+            ),
+        )
+        if plan is not None:
+            return plan
     if allow_stream:
         # region preference stays primary (a smaller region multiplies the
         # alpha^2 streamed weight re-reads); within a region prefer the
         # double-buffered two-slot weight pipeline over channel-tiled
         # double buffering over the blocking single slot, and within a
-        # weight regime the pipelined input buffer
+        # weight regime the cheapest feasible input buffer at ``batch``
         for r in regions:
             prog = compile_program(spec, r, compute_dtype=compute_dtype)
-            for xs in x_options(prog):
-                if prog.vmem_stream_bytes(2, xs) <= vmem_budget:
-                    return LaunchPlan(
-                        program=prog, streamed=True, w_slots=2, x_slots=xs,
-                    )
-            for ct in prog.c_tile_options():
-                for xs in x_options(prog):
-                    if prog.vmem_stream_bytes(2, xs, ct) <= vmem_budget:
-                        return LaunchPlan(
-                            program=prog, streamed=True, w_slots=2,
-                            x_slots=xs, c_tiles=ct,
+            rungs = [dict(w_slots=2)]
+            rungs += [dict(w_slots=2, c_tiles=ct) for ct in prog.c_tile_options()]
+            rungs += [dict(w_slots=1)]
+            for knobs in rungs:
+                plan = pick_x(
+                    prog,
+                    lambda xs, prog=prog, knobs=knobs: feasible(
+                        LaunchPlan(
+                            program=prog, streamed=True, x_slots=xs, **knobs
                         )
-            for xs in x_options(prog):
-                if prog.vmem_stream_bytes(1, xs) <= vmem_budget:
-                    return LaunchPlan(
-                        program=prog, streamed=True, w_slots=1, x_slots=xs,
-                    )
+                    ),
+                )
+                if plan is not None:
+                    return plan
     return None
 
 

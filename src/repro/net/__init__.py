@@ -11,6 +11,11 @@ end-to-end CNN inference with machine-chosen fusion boundaries:
 * :mod:`repro.net.runner` — jit-compiled batched ``run_network`` executing a
   :class:`~repro.net.partition.PartitionPlan` as fused-pyramid launches plus
   residual adds and the classifier head, with per-level END skip statistics.
+* :mod:`repro.net.serve` — continuous bucketed batching over the runner:
+  FIFO admission through ``robust.validate.check_request``, pad-to-bucket
+  execution through a plan+jit LRU cache keyed (graph, bucket, dtype),
+  double-buffered host→device input staging, and per-bucket modeled-SLO vs
+  measured-latency reporting (DESIGN.md §14).
 """
 
 from .graph import MODELS, Graph, Node, fusable_segments, infer_shapes
@@ -24,10 +29,27 @@ from .partition import (
 from .runner import (
     bf16_logit_tol,
     init_network_params,
+    jit_trace_count,
     prepare_network_params,
     reference_network,
+    reset_jit_trace_count,
     run_network,
 )
+# serve.py loads lazily so `python -m repro.net.serve` doesn't import the
+# module twice (once as repro.net.serve, once as __main__ via runpy)
+_LAZY_SERVE = (
+    "Request", "RequestResult", "ServeConfig", "ServingEngine",
+    "bucket_for", "pad_to_bucket",
+)
+
+
+def __getattr__(name: str):
+    if name in _LAZY_SERVE:
+        from . import serve
+
+        return getattr(serve, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 __all__ = [
     "MODELS",
@@ -35,14 +57,22 @@ __all__ = [
     "Node",
     "PartitionPlan",
     "PyramidPlan",
+    "Request",
+    "RequestResult",
+    "ServeConfig",
+    "ServingEngine",
     "auto_partition",
     "bf16_logit_tol",
+    "bucket_for",
     "fusable_segments",
     "infer_shapes",
     "init_network_params",
+    "jit_trace_count",
     "layerwise_partition",
+    "pad_to_bucket",
     "paper_partition",
     "prepare_network_params",
     "reference_network",
+    "reset_jit_trace_count",
     "run_network",
 ]

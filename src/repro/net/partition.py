@@ -102,6 +102,13 @@ class PartitionPlan:
     def modeled_cycles(self) -> int:
         return sum(p.launch.modeled_cycles(self.batch) for p in self.pyramids)
 
+    def modeled_us(self) -> float:
+        """Whole-plan modeled latency at the cycle model's reference
+        frequency — the serving engine's per-bucket SLO seed (DESIGN.md
+        §14): launches run back to back, so the plan's modeled time is the
+        sum of its launches'."""
+        return sum(p.launch.modeled_us(self.batch) for p in self.pyramids)
+
     def n_launches(self) -> int:
         return len(self.pyramids)
 
@@ -143,14 +150,16 @@ def _group_specs(segment: Segment) -> tuple[list[list], list[int], list[int]]:
 def _span_launch(
     groups: list[list], bound_sizes: list[int], i: int, j: int,
     vmem_budget: int, prefer_region: str = "largest",
-    compute_dtype: str = "float32",
+    compute_dtype: str = "float32", batch: int = 1,
 ) -> LaunchPlan | None:
-    """Launch plan (or None) for one pyramid covering groups [i, j)."""
+    """Launch plan (or None) for one pyramid covering groups [i, j),
+    knob-costed at ``batch`` (the serving bucket's batch reaches all the way
+    into the per-launch ladder, not just the DP's span comparison)."""
     levels = tuple(itertools.chain.from_iterable(groups[i:j]))
     spec = FusionSpec(levels=levels, input_size=bound_sizes[i])
     return plan_launch(
-        spec, vmem_budget=vmem_budget, prefer_region=prefer_region,
-        compute_dtype=compute_dtype,
+        spec, vmem_budget=vmem_budget, batch=batch,
+        prefer_region=prefer_region, compute_dtype=compute_dtype,
     )
 
 
@@ -186,7 +195,7 @@ def partition_segment(
                 cost[(i, j)] = INFEASIBLE
                 continue
             lp = _span_launch(groups, bound_sizes, i, j, vmem_budget,
-                              prefer_region, compute_dtype)
+                              prefer_region, compute_dtype, batch)
             if lp is None:
                 cost[(i, j)] = INFEASIBLE
                 continue
@@ -238,7 +247,7 @@ def brute_force_segment(
         hbm = cyc = 0.0
         for i, j in zip(bounds, bounds[1:]):
             lp = _span_launch(groups, bound_sizes, i, j, vmem_budget,
-                              compute_dtype=compute_dtype)
+                              compute_dtype=compute_dtype, batch=batch)
             if lp is None:
                 break
             hbm += lp.hbm_bytes(batch)
@@ -342,20 +351,30 @@ def auto_partition(
     ``run_model`` / the benchmark loop re-request identical plans every call
     — they now hit the cache and reuse the same :class:`PartitionPlan`
     object (which also keeps its jit static-argument identity stable).
-    Inspect or reset via :func:`partition_cache_info` /
+    The serving engine keys its plan+jit cache on exactly this memo's key
+    tuple, so every executed bucket calls through here and its hit shows up
+    in the counters.  Inspect or reset via :func:`partition_cache_info` /
     :func:`clear_partition_cache`."""
     cdt = canonical_dtype(
         graph.compute_dtype if compute_dtype is None else compute_dtype
     )
-    before = _auto_partition_cached.cache_info().misses
+    before = _auto_partition_cached.cache_info()
     plan = _auto_partition_cached(
         graph, vmem_budget, batch, max_convs, prefer_region, cdt
     )
-    hit = _auto_partition_cached.cache_info().misses == before
+    after = _auto_partition_cached.cache_info()
+    hit = after.misses == before.misses
+    # an lru miss always inserts; when the insert did not grow the cache,
+    # an older plan was evicted (thrash under many serve-bucket keys)
+    evicted = (not hit) and after.currsize == before.currsize
     _CACHE_COUNTERS["hits" if hit else "misses"] += 1
+    if evicted:
+        _CACHE_COUNTERS["evictions"] += 1
     tracer = get_tracer()
     if tracer.enabled:
         tracer.bump("partition_cache_hit" if hit else "partition_cache_miss")
+        if evicted:
+            tracer.bump("partition_cache_eviction")
         tracer.record_event(
             "auto_partition",
             model=graph.name,
@@ -378,10 +397,14 @@ class PartitionCacheInfo(NamedTuple):
     module previously exposed directly — are reset by
     :func:`clear_partition_cache`, so repeated benchmark runs that clear
     between configs report per-run statistics instead of a process-lifetime
-    accumulation."""
+    accumulation.  ``evictions`` counts plans the bounded lru dropped to
+    admit a new key: the serving engine multiplies keys per (model, bucket,
+    dtype), so a rising eviction count is the cache-thrash signal traces
+    surface via the ``partition_cache_eviction`` counter."""
 
     hits: int
     misses: int
+    evictions: int
     currsize: int
     maxsize: int | None
 
@@ -389,7 +412,7 @@ class PartitionCacheInfo(NamedTuple):
 # auto_partition call counters; cleared alongside the plan cache so a
 # cleared cache never reports stale hit/miss history (the trace events and
 # partition_cache_info read the same numbers)
-_CACHE_COUNTERS = {"hits": 0, "misses": 0}
+_CACHE_COUNTERS = {"hits": 0, "misses": 0, "evictions": 0}
 
 
 def partition_cache_info() -> PartitionCacheInfo:
@@ -400,6 +423,7 @@ def partition_cache_info() -> PartitionCacheInfo:
     return PartitionCacheInfo(
         hits=_CACHE_COUNTERS["hits"],
         misses=_CACHE_COUNTERS["misses"],
+        evictions=_CACHE_COUNTERS["evictions"],
         currsize=lru.currsize,
         maxsize=lru.maxsize,
     )
@@ -407,9 +431,10 @@ def partition_cache_info() -> PartitionCacheInfo:
 
 def clear_partition_cache() -> None:
     """Drop all memoized partition plans (e.g. between benchmark configs)
-    and reset the hit/miss counters with them."""
+    and reset the hit/miss/eviction counters with them."""
     _auto_partition_cached.cache_clear()
-    _CACHE_COUNTERS["hits"] = _CACHE_COUNTERS["misses"] = 0
+    for k in _CACHE_COUNTERS:
+        _CACHE_COUNTERS[k] = 0
     tracer = get_tracer()
     if tracer.enabled:
         tracer.record_event("partition_cache_clear")

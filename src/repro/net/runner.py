@@ -274,6 +274,28 @@ def _forward(
     return values[graph.output.name], skips
 
 
+# Python-side retrace accounting of the jit fast path.  ``jax.jit`` keys its
+# executable cache on (static args, operand shapes/dtypes), so every distinct
+# batch size is a fresh trace + compile even when the plan is identical —
+# the cost the serving engine's pad-to-bucket admission amortizes: all
+# requests in a bucket share one input shape, so wave 2 of a bucket replays
+# the wave-1 executable.  The counter increments inside the traced body
+# (which Python only executes at trace time), making "how many compiles did
+# this workload pay" a testable quantity (``tests/test_serve.py``).
+_JIT_STATS = {"traces": 0}
+
+
+def jit_trace_count() -> int:
+    """Process-lifetime count of ``run_network`` jit fast-path traces."""
+    return _JIT_STATS["traces"]
+
+
+def reset_jit_trace_count() -> None:
+    """Zero the retrace counter (the executable cache itself is untouched —
+    re-running a known shape after a reset still counts 0 new traces)."""
+    _JIT_STATS["traces"] = 0
+
+
 @partial(jax.jit, static_argnames=("plan", "end_skip", "interpret", "dtype"))
 def _run_network_jit(
     x: jnp.ndarray,
@@ -284,6 +306,11 @@ def _run_network_jit(
     interpret: bool | None = None,
     dtype: str | None = None,
 ) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
+    # executes at trace time only: one bump per new (plan, shape, dtype) key
+    _JIT_STATS["traces"] += 1
+    tracer = get_tracer()
+    if tracer.enabled:
+        tracer.bump("run_network_jit_trace")
     cdt = canonical_dtype(plan.compute_dtype if dtype is None else dtype)
     return _forward(
         x, params, plan=plan, end_skip=end_skip, interpret=interpret, cdt=cdt

@@ -1,0 +1,623 @@
+"""Serving engine: continuous bucketed batching over the fused-pyramid runner.
+
+``run_network`` is a batch call: fast once planned and compiled, but both
+costs key on the exact batch size — every distinct request shape pays a
+fresh ``auto_partition`` DP and a fresh jit trace.  Sustained traffic is the
+opposite shape: many small requests, few distinct sizes.  This module turns
+the runner into a service (ROADMAP's continuous-batching item):
+
+* **Admission** — requests (single images or micro-batches) enter a FIFO
+  queue through :func:`repro.robust.validate.check_request`: shape and
+  finiteness are the per-request half of the preflight contract, so a
+  poisoned request surfaces as a typed error *at submit* and never stalls
+  or contaminates the queue (the plan/params half is validated once per
+  cache entry).
+* **Bucketing** — admitted rows are packed FIFO into power-of-two batch
+  **buckets** (:func:`bucket_for`) and padded to the bucket size
+  (:func:`pad_to_bucket`).  Batch elements are independent through every
+  conv/pool/dense/global-pool op, so the real rows of a padded batch are
+  **bit-identical** to running them unpadded under the same plan
+  (``tests/test_serve.py`` enforces this at f32 and bf16) — padding buys
+  shape reuse for free.
+* **Plan + jit cache** — each bucket executes through one cache entry keyed
+  ``(graph identity, vmem budget, bucket, dtype)``: the bucket-batch
+  ``auto_partition`` plan (the DP costs launches at the *bucket's* batch,
+  so cut points shift with bucket — see DESIGN.md §14), its prepared
+  params, and the modeled latency estimate.  Plans come through the
+  memoized ``auto_partition`` (its lru is the seed cache), and because all
+  requests in a bucket share one padded shape, the jit executable is reused
+  too — wave 2 of a bucket performs zero replans and zero retraces
+  (``repro.net.runner.jit_trace_count`` is the regression hook).  The
+  engine's own :class:`collections.OrderedDict` LRU bounds live entries and
+  counts hits/misses/evictions next to ``partition_cache_info()``.
+* **Double-buffered input staging** — while bucket *n* computes on device,
+  bucket *n+1*'s padded host batch is already moving through
+  ``jax.device_put`` (jax dispatch is asynchronous, so the host copy
+  overlaps device compute).  The cost model twin is
+  :func:`repro.core.cycle_model.serve_stream_cycles`.
+* **SLO + measurement** — each bucket publishes ``slo_us`` (modeled
+  cold latency: host staging + the plan's ``modeled_us()``), ``steady_us``
+  (the double-buffered steady state, ``max(compute, staging)``), and
+  measured p50/p95 request latency + imgs/s; with a tracer installed
+  (``repro.obs.tracing``) every batch records a ``serve_batch`` event and
+  the cache bumps ``serve_cache_{hit,miss,eviction}`` counters.
+* **Degradation, not drops** — ``ServeConfig(guarded=True)`` runs each
+  bucket under the PR 8 ladder (``repro.robust.guarding``): a VMEM miss
+  replans, a numeric fault quarantines the launch to the reference path,
+  and the requests still complete.
+
+``python -m repro.net.serve --model lenet --requests 32 --dry-stream``
+drives a deterministic two-wave synthetic stream and prints the
+bucket/SLO/throughput table (the CI smoke contract).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from collections import OrderedDict, deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cycle_model import (
+    DEFAULT_PARAMS,
+    host_staging_cycles,
+    serve_stream_cycles,
+)
+from repro.core.dtypes import DTYPE_BYTES, canonical_dtype
+from repro.core.program import VMEM_BUDGET_BYTES
+from repro.obs.trace import get_tracer
+from repro.robust.errors import PreflightError, RobustError
+from repro.robust.guard import GuardConfig, guarding
+from repro.robust.validate import check_request
+
+from .graph import Graph
+from .partition import PartitionPlan, auto_partition
+from .runner import Params, prepare_network_params, run_network
+
+
+def bucket_for(rows: int, buckets: tuple[int, ...]) -> int:
+    """Smallest configured bucket that fits ``rows`` real rows."""
+    for b in sorted(buckets):
+        if rows <= b:
+            return b
+    raise PreflightError(
+        f"request spans {rows} rows but the largest bucket is"
+        f" {max(buckets)}; split micro-batches before submit",
+        rows=rows, buckets=sorted(buckets),
+    )
+
+
+def pad_to_bucket(x, bucket: int) -> np.ndarray:
+    """Zero-pad a ``(rows, H, W, C)`` batch up to ``bucket`` rows.
+
+    Zero rows ride along through the padded launch and are sliced off
+    before results are returned; the real rows' logits are bit-identical to
+    the unpadded run under the same plan (batch elements never interact)."""
+    x = np.asarray(x)
+    rows = x.shape[0]
+    if rows == bucket:
+        return x
+    if rows > bucket:
+        raise PreflightError(
+            f"cannot pad {rows} rows down to bucket {bucket}",
+            rows=rows, bucket=bucket,
+        )
+    pad = np.zeros((bucket - rows,) + x.shape[1:], dtype=x.dtype)
+    return np.concatenate([x, pad], axis=0)
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Static knobs of one serving engine.
+
+    ``buckets`` are the admissible padded batch sizes (ascending powers of
+    two by convention; any ascending ints work).  ``plan_cache_size`` bounds
+    the engine's plan+params LRU — evictions are counted, and because plans
+    come through the memoized ``auto_partition``, a re-admitted key usually
+    rebuilds from the lru without re-running the DP.  ``compute_dtype``
+    ``None`` means the graph's own default.  ``guarded`` runs every bucket
+    under the degradation ladder; ``require_finite`` controls the admission
+    NaN/Inf scan (shape checks always run).  ``max_queue`` bounds queued
+    requests — an overfull queue rejects at submit (backpressure) instead
+    of growing without bound."""
+
+    buckets: tuple[int, ...] = (1, 2, 4, 8)
+    plan_cache_size: int = 16
+    compute_dtype: str | None = None
+    vmem_budget: int = VMEM_BUDGET_BYTES
+    prefer_region: str = "largest"
+    interpret: bool | None = None
+    end_skip: bool = True
+    guarded: bool = False
+    require_finite: bool = True
+    max_queue: int = 1024
+
+    def __post_init__(self):
+        if not self.buckets or list(self.buckets) != sorted(set(self.buckets)):
+            raise PreflightError(
+                f"buckets must be ascending and unique, got {self.buckets}",
+                buckets=list(self.buckets),
+            )
+
+
+@dataclass(frozen=True)
+class Request:
+    """One admitted unit of work: ``rows`` real images awaiting a bucket."""
+
+    id: int
+    x: np.ndarray  # (rows, H, W, C), host-side
+    rows: int
+    enqueue_s: float
+
+
+@dataclass(frozen=True)
+class RequestResult:
+    """Terminal state of one submitted request.
+
+    Exactly one of ``logits``/``error`` is set: rejected requests carry the
+    typed :class:`~repro.robust.errors.RobustError` the admission check
+    raised (``bucket``/``latency_ms`` stay ``None``); completed requests
+    carry their real rows' logits and the enqueue→complete wall clock."""
+
+    id: int
+    rows: int
+    bucket: int | None = None
+    logits: np.ndarray | None = None
+    error: RobustError | None = None
+    latency_ms: float | None = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
+
+
+@dataclass(frozen=True)
+class _PlanEntry:
+    """One plan+jit cache entry: everything a bucket needs to execute."""
+
+    bucket: int
+    plan: PartitionPlan
+    prepared: Params
+    compute_cycles: int
+    staging_cycles: int
+
+    @property
+    def slo_us(self) -> float:
+        """Modeled cold latency of one bucket execution: the host→device
+        input copy plus the plan's launches, nothing overlapped — the
+        latency bound the engine publishes per bucket."""
+        return serve_stream_cycles(
+            1, self.compute_cycles, self.staging_cycles, double_buffered=False
+        ) / DEFAULT_PARAMS.freq_mhz
+
+    @property
+    def steady_us(self) -> float:
+        """Modeled steady-state per-bucket latency under double buffering:
+        ``max(compute, staging)`` — the throughput bound."""
+        two = serve_stream_cycles(
+            2, self.compute_cycles, self.staging_cycles, double_buffered=True
+        )
+        return (two - (self.compute_cycles + self.staging_cycles)) / (
+            DEFAULT_PARAMS.freq_mhz
+        )
+
+
+@dataclass
+class _BucketStats:
+    requests: int = 0
+    images: int = 0
+    batches: int = 0
+    wall_ms: float = 0.0
+    latencies_ms: list = field(default_factory=list)
+
+
+def _percentile(values: list, q: float) -> float:
+    return float(np.percentile(np.asarray(values, dtype=np.float64), q))
+
+
+class ServingEngine:
+    """Continuous bucketed batching over one graph's fused-pyramid runner.
+
+    Single-threaded by design: ``submit`` admits (or rejects) requests into
+    the FIFO queue, ``drain`` forms buckets and executes them with the
+    double-buffered input stage, ``summary`` renders the bucket/SLO table.
+    The engine owns no device state beyond the staged batch — all heavy
+    reuse lives in the plan+jit cache, so two engines over the same graph
+    share compiled executables through jax's own cache.
+    """
+
+    def __init__(
+        self, graph: Graph, params: Params, config: ServeConfig | None = None
+    ) -> None:
+        self.graph = graph
+        self.config = config or ServeConfig()
+        self.master_params = params
+        self.compute_dtype = canonical_dtype(
+            self.config.compute_dtype or graph.compute_dtype
+        )
+        self.queue: deque[Request] = deque()
+        self.results: dict[int, RequestResult] = {}
+        self._cache: OrderedDict[tuple, _PlanEntry] = OrderedDict()
+        self.cache_counters = {"hits": 0, "misses": 0, "evictions": 0}
+        self._stats: dict[int, _BucketStats] = {}
+        self._next_id = 0
+        self.rejected = 0
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, x) -> int:
+        """Admit one request (a ``(H, W, C)`` image or ``(rows, H, W, C)``
+        micro-batch); returns its request id.
+
+        A request that fails admission — wrong shape, non-finite pixels,
+        more rows than the largest bucket, or a full queue — is *rejected*,
+        not raised: its :class:`RequestResult` carries the typed error and
+        the queue keeps moving.  Callers poll :attr:`results`."""
+        rid = self._next_id
+        self._next_id += 1
+        x = np.asarray(x)
+        if x.ndim == 3:
+            x = x[None]
+        rows = int(x.shape[0]) if x.ndim == 4 else 0
+        try:
+            if len(self.queue) >= self.config.max_queue:
+                raise PreflightError(
+                    f"queue is full ({self.config.max_queue} requests);"
+                    " drain before submitting more",
+                    max_queue=self.config.max_queue,
+                )
+            bucket_for(max(rows, 1), self.config.buckets)
+            check_request(
+                x, self.graph, require_finite=self.config.require_finite
+            )
+        except RobustError as err:
+            self.rejected += 1
+            self.results[rid] = RequestResult(id=rid, rows=rows, error=err)
+            tracer = get_tracer()
+            if tracer.enabled:
+                tracer.bump("serve_reject")
+                tracer.record_event(
+                    "serve_reject", request=rid, rows=rows,
+                    error=type(err).__name__, message=str(err),
+                )
+            return rid
+        self.queue.append(
+            Request(id=rid, x=x, rows=rows, enqueue_s=time.perf_counter())
+        )
+        return rid
+
+    def submit_many(self, xs) -> list[int]:
+        return [self.submit(x) for x in xs]
+
+    # -- plan + jit cache ---------------------------------------------------
+
+    def _key(self, bucket: int) -> tuple:
+        # the memo key mirrors auto_partition's: identical graph structure,
+        # budget, bucket batch, and dtype mean identical plans
+        return (self.graph, self.config.vmem_budget, bucket,
+                self.compute_dtype)
+
+    def _entry(self, bucket: int) -> _PlanEntry:
+        key = self._key(bucket)
+        tracer = get_tracer()
+        hit = key in self._cache
+        if hit:
+            self._cache.move_to_end(key)
+            self.cache_counters["hits"] += 1
+        else:
+            self.cache_counters["misses"] += 1
+            plan = auto_partition(
+                self.graph,
+                vmem_budget=self.config.vmem_budget,
+                batch=bucket,
+                prefer_region=self.config.prefer_region,
+                compute_dtype=self.compute_dtype,
+            )
+            prepared = prepare_network_params(plan, self.master_params)
+            in_bytes = DTYPE_BYTES[self.compute_dtype] * bucket * (
+                self.graph.input_size ** 2 * self.graph.in_channels
+            )
+            self._cache[key] = _PlanEntry(
+                bucket=bucket,
+                plan=plan,
+                prepared=prepared,
+                compute_cycles=plan.modeled_cycles(),
+                staging_cycles=host_staging_cycles(in_bytes),
+            )
+            while len(self._cache) > self.config.plan_cache_size:
+                self._cache.popitem(last=False)
+                self.cache_counters["evictions"] += 1
+                if tracer.enabled:
+                    tracer.bump("serve_cache_eviction")
+        entry = self._cache[key]
+        if tracer.enabled:
+            tracer.bump("serve_cache_hit" if hit else "serve_cache_miss")
+            tracer.record_event(
+                "serve_plan_cache",
+                model=self.graph.name, bucket=bucket,
+                cache="hit" if hit else "miss",
+                compute_dtype=self.compute_dtype,
+                launches=entry.plan.n_launches(),
+                slo_us=entry.slo_us,
+            )
+        return entry
+
+    # -- execution ----------------------------------------------------------
+
+    def _form_batch(self) -> list[Request] | None:
+        """Pop the next FIFO run of requests that fits the largest bucket.
+
+        Strictly in admission order — no peeking past the head to fill a
+        bucket with later small requests, so a large request is never
+        starved by a stream of singles (the fairness property the tests
+        assert)."""
+        if not self.queue:
+            return None
+        batch, rows = [], 0
+        limit = max(self.config.buckets)
+        while self.queue and rows + self.queue[0].rows <= limit:
+            req = self.queue.popleft()
+            batch.append(req)
+            rows += req.rows
+        return batch
+
+    def _stage(self, batch: list[Request]):
+        """Pad the batch to its bucket and start the host→device copy —
+        called for bucket ``n+1`` while bucket ``n`` computes, so the copy
+        overlaps compute (the double-buffered input stage)."""
+        rows = sum(r.rows for r in batch)
+        bucket = bucket_for(rows, self.config.buckets)
+        entry = self._entry(bucket)
+        host = np.concatenate([r.x for r in batch], axis=0)
+        x_dev = jax.device_put(
+            jnp.asarray(pad_to_bucket(host, bucket), dtype=jnp.float32)
+        )
+        return batch, bucket, entry, x_dev
+
+    def _dispatch(self, entry: _PlanEntry, x_dev):
+        if self.config.guarded:
+            with guarding(GuardConfig(), source_params=self.master_params):
+                return run_network(
+                    x_dev, entry.prepared, plan=entry.plan,
+                    end_skip=self.config.end_skip,
+                    interpret=self.config.interpret,
+                )
+        return run_network(
+            x_dev, entry.prepared, plan=entry.plan,
+            end_skip=self.config.end_skip,
+            interpret=self.config.interpret,
+        )
+
+    def _record(self, batch, bucket, entry, logits, wall_ms) -> None:
+        done_s = time.perf_counter()
+        host_logits = np.asarray(logits)
+        stats = self._stats.setdefault(bucket, _BucketStats())
+        stats.batches += 1
+        stats.wall_ms += wall_ms
+        row = 0
+        for req in batch:
+            lat_ms = (done_s - req.enqueue_s) * 1e3
+            self.results[req.id] = RequestResult(
+                id=req.id,
+                rows=req.rows,
+                bucket=bucket,
+                logits=host_logits[row: row + req.rows],
+                latency_ms=lat_ms,
+            )
+            row += req.rows
+            stats.requests += 1
+            stats.images += req.rows
+            stats.latencies_ms.append(lat_ms)
+        tracer = get_tracer()
+        if tracer.enabled:
+            tracer.record_event(
+                "serve_batch",
+                model=self.graph.name, bucket=bucket,
+                requests=len(batch), rows=row,
+                wall_ms=wall_ms, slo_us=entry.slo_us,
+            )
+
+    def drain(self) -> list[RequestResult]:
+        """Execute the queue to empty; returns completed results in order.
+
+        The loop is the double-buffered pipeline: dispatch bucket ``n``
+        (jax runs it asynchronously), immediately stage bucket ``n+1``'s
+        padded host batch onto the device, then block on ``n`` — the
+        ``n+1`` copy rides under ``n``'s compute, the host analogue of the
+        kernel's revolving input prefetch."""
+        completed: list[RequestResult] = []
+        nxt = self._form_batch()
+        staged = self._stage(nxt) if nxt else None
+        while staged is not None:
+            batch, bucket, entry, x_dev = staged
+            t0 = time.perf_counter()
+            logits, _ = self._dispatch(entry, x_dev)
+            nxt = self._form_batch()
+            staged = self._stage(nxt) if nxt else None
+            jax.block_until_ready(logits)
+            wall_ms = (time.perf_counter() - t0) * 1e3
+            self._record(batch, bucket, entry, logits, wall_ms)
+            completed.extend(self.results[r.id] for r in batch)
+        return completed
+
+    def serve(self, xs) -> list[RequestResult]:
+        """Submit + drain in one call; results ordered by request id
+        (admission order), rejected requests included with their errors."""
+        ids = self.submit_many(xs)
+        self.drain()
+        return [self.results[i] for i in ids]
+
+    # -- reporting ----------------------------------------------------------
+
+    def cache_info(self) -> dict:
+        return {
+            **self.cache_counters,
+            "currsize": len(self._cache),
+            "maxsize": self.config.plan_cache_size,
+        }
+
+    def summary(self) -> dict:
+        """The bucket/SLO/throughput table as one JSON-safe dict — modeled
+        (``slo_us``/``steady_us``/``modeled_cycles``) next to measured
+        (``p50_ms``/``p95_ms``/``imgs_per_s``) per bucket, plus the serve
+        and partition cache counters (DESIGN.md §14's observable surface)."""
+        from .partition import partition_cache_info
+        from .runner import jit_trace_count
+
+        rows = []
+        for bucket in sorted(self._stats):
+            st = self._stats[bucket]
+            entry = self._cache.get(self._key(bucket))
+            row = {
+                "bucket": bucket,
+                "batches": st.batches,
+                "requests": st.requests,
+                "images": st.images,
+                "p50_ms": _percentile(st.latencies_ms, 50),
+                "p95_ms": _percentile(st.latencies_ms, 95),
+                "imgs_per_s": (
+                    st.images / (st.wall_ms / 1e3) if st.wall_ms else 0.0
+                ),
+            }
+            if entry is not None:  # evicted entries lose their model columns
+                row.update(
+                    slo_us=entry.slo_us,
+                    steady_us=entry.steady_us,
+                    modeled_cycles=entry.compute_cycles,
+                    staging_cycles=entry.staging_cycles,
+                    launches=entry.plan.n_launches(),
+                    hbm_bytes=entry.plan.hbm_bytes(),
+                )
+            rows.append(row)
+        total_images = sum(st.images for st in self._stats.values())
+        total_wall_ms = sum(st.wall_ms for st in self._stats.values())
+        return {
+            "model": self.graph.name,
+            "compute_dtype": self.compute_dtype,
+            "guarded": self.config.guarded,
+            "buckets": rows,
+            "completed": sum(1 for r in self.results.values() if r.ok),
+            "rejected": self.rejected,
+            "images": total_images,
+            "imgs_per_s": (
+                total_images / (total_wall_ms / 1e3) if total_wall_ms else 0.0
+            ),
+            "cache": {
+                "serve": self.cache_info(),
+                "partition": partition_cache_info()._asdict(),
+                "jit_traces": jit_trace_count(),
+            },
+        }
+
+
+# ---------------------------------------------------------------------------
+# CLI: synthetic request stream
+# ---------------------------------------------------------------------------
+
+
+def _synthetic_stream(graph: Graph, n: int, buckets, seed: int):
+    """Deterministic request mix: row counts cycle through the bucket range
+    so every bucket is exercised; pixels are seeded normals."""
+    rng = np.random.default_rng(seed)
+    limit = max(buckets)
+    sizes = [(i % limit) + 1 for i in range(n)]
+    return [
+        rng.standard_normal(
+            (r, graph.input_size, graph.input_size, graph.in_channels)
+        ).astype(np.float32)
+        for r in sizes
+    ]
+
+
+def _wave_delta(before: dict, after: dict) -> dict:
+    return {k: after[k] - before[k] for k in after}
+
+
+def _cache_snapshot(engine: ServingEngine) -> dict:
+    from .partition import partition_cache_info
+    from .runner import jit_trace_count
+
+    info = partition_cache_info()
+    return {
+        "serve_hits": engine.cache_counters["hits"],
+        "serve_misses": engine.cache_counters["misses"],
+        "partition_hits": info.hits,
+        "partition_misses": info.misses,
+        "jit_traces": jit_trace_count(),
+    }
+
+
+def main(argv=None) -> int:
+    from .graph import MODELS
+    from .runner import init_network_params
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.net.serve",
+        description="Drive a synthetic request stream through the serving"
+        " engine and print the bucket/SLO/throughput table.",
+    )
+    ap.add_argument("--model", default="lenet", choices=sorted(MODELS))
+    ap.add_argument("--requests", type=int, default=32,
+                    help="requests per wave (two waves are driven; the"
+                    " second demonstrates plan/jit cache reuse)")
+    ap.add_argument("--input", type=int, default=None,
+                    help="override the model's input size")
+    ap.add_argument("--dtype", default=None,
+                    help="compute dtype (default: the graph's)")
+    ap.add_argument("--buckets", default="1,2,4,8",
+                    help="comma-separated ascending batch buckets")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--guarded", action="store_true",
+                    help="run buckets under the degradation ladder")
+    ap.add_argument("--dry-stream", action="store_true",
+                    help="deterministic in-process stream sized for CI"
+                    " smoke (interpret-mode kernels)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the summary (with per-wave cache deltas)"
+                    " as JSON")
+    args = ap.parse_args(argv)
+
+    kwargs = {"input_size": args.input} if args.input else {}
+    graph = MODELS[args.model](**kwargs)
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    config = ServeConfig(
+        buckets=buckets,
+        compute_dtype=args.dtype,
+        guarded=args.guarded,
+        interpret=True if args.dry_stream else None,
+    )
+    params = init_network_params(graph, jax.random.PRNGKey(args.seed))
+    engine = ServingEngine(graph, params, config)
+    stream = _synthetic_stream(graph, args.requests, buckets, args.seed)
+
+    waves = []
+    for wave in (1, 2):
+        before = _cache_snapshot(engine)
+        t0 = time.perf_counter()
+        engine.submit_many(stream)
+        engine.drain()
+        wall_s = time.perf_counter() - t0
+        delta = _wave_delta(before, _cache_snapshot(engine))
+        delta["wall_s"] = wall_s
+        waves.append(delta)
+
+    summary = engine.summary()
+    summary["waves"] = waves
+
+    from repro.obs.explain import serve_table
+
+    serve_table(summary)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(summary, f, indent=2, default=str)
+        print(f"wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -41,6 +41,7 @@ from .errors import (
 
 _LAZY = {
     "preflight": "validate",
+    "check_request": "validate",
     "GuardConfig": "guard",
     "get_guard": "guard",
     "guarding": "guard",
@@ -75,6 +76,7 @@ __all__ = [
     "PreflightError",
     "RobustError",
     "RunReport",
+    "check_request",
     "corrupt_params",
     "get_guard",
     "get_injector",

@@ -32,6 +32,7 @@ never pays for it.
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.dtypes import EXEC_DTYPES, canonical_dtype, jnp_dtype
 
@@ -78,6 +79,30 @@ def _check_input(x, graph) -> None:
         raise PreflightError(
             f"input has {c} channels, graph {graph.name} expects"
             f" {graph.in_channels}",
+            graph=graph.name,
+        )
+
+
+def check_request(x, graph, *, require_finite: bool = True) -> None:
+    """Admission-time validation of one serving request against a graph.
+
+    The per-request subset of :func:`preflight`: the plan/params half of the
+    contract is validated once per (model, bucket) when the serving engine
+    builds a cache entry, but *every* request body is untrusted — shape
+    agreement with the graph and (``require_finite``) input finiteness are
+    the two properties a queued request can individually violate.  Raises
+    :class:`PreflightError` on shape problems and :class:`NumericError` on
+    NaN/Inf pixels, both cheap O(input) host-side checks (numpy, never a
+    jax dispatch — admission runs per request on the serving hot path), so
+    a poisoned request is rejected at the queue door instead of inside a
+    padded bucket where its rows would sit next to healthy traffic.
+    """
+    _check_input(x, graph)
+    if require_finite and not np.isfinite(
+        np.asarray(x, dtype=np.float32)
+    ).all():
+        raise NumericError(
+            f"request input carries non-finite values (graph {graph.name})",
             graph=graph.name,
         )
 
