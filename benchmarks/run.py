@@ -26,8 +26,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import statistics
-import time
 
 FREQ_MHZ = 100.0
 
@@ -38,34 +36,24 @@ WALLCLOCK_REPS = 5
 
 
 def _percentile_ms(times: list[float], q: float) -> float:
-    """Linear-interpolated q-th percentile (times already in ms)."""
-    xs = sorted(times)
-    idx = q / 100.0 * (len(xs) - 1)
-    lo = int(idx)
-    hi = min(lo + 1, len(xs) - 1)
-    return xs[lo] + (xs[hi] - xs[lo]) * (idx - lo)
+    """Linear-interpolated q-th percentile (times already in ms) — the
+    shared :func:`repro.obs.stats.percentile`, kept under its historical
+    name for callers and tests."""
+    from repro.obs.stats import percentile
+
+    return percentile(times, q)
 
 
 def _timed_stats_ms(fn, reps: int = WALLCLOCK_REPS) -> dict:
-    """Wall-clock stats over ``reps`` timed calls of ``fn`` (which must
-    block until its results are ready), after one untimed warm-up call that
-    absorbs jit compilation — single-shot numbers are scheduler noise.
-
-    Returns ``{"p50_ms", "p95_ms", "reps"}``; every wall-clock metric in
+    """Wall-clock stats over ``reps`` timed calls of ``fn`` — the shared
+    :func:`repro.obs.stats.timed_stats_ms` (warm-up + reps, returns
+    ``{"p50_ms", "p95_ms", "reps"}``).  Every wall-clock metric in
     BENCH_pyramid.json records this dict alongside its median scalar so the
     trajectory carries tail latency too.  Wall clocks are never gated by
     check_regression, so the extra keys do not widen the gate."""
-    fn()  # warm-up: jit cache + device transfer
-    times = []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        fn()
-        times.append((time.perf_counter() - t0) * 1e3)
-    return {
-        "p50_ms": statistics.median(times),
-        "p95_ms": _percentile_ms(times, 95.0),
-        "reps": reps,
-    }
+    from repro.obs.stats import timed_stats_ms
+
+    return timed_stats_ms(fn, reps)
 
 
 def _timed_median_ms(fn, reps: int = WALLCLOCK_REPS) -> float:
@@ -340,12 +328,22 @@ def _serving(csv=print, dry_run: bool = True) -> dict:
                 f"{steady_us:.1f},{slo_us / bucket:.1f}"
             )
         b1, b8 = rows["bucket1"], rows["bucket8"]
+        efficiency = 8 * b1["slo_us"] / b8["slo_us"]
         csv(
             f"serving_batch_efficiency,{model},bucket8_vs_1x8,"
-            f"{8 * b1['slo_us'] / b8['slo_us']:.2f}x_modeled,launches,"
+            f"{efficiency:.2f}x_modeled,launches,"
             f"{b1['launches']}->{b8['launches']}"
         )
-        out[model] = {"buckets": rows}
+        # the serving acceptance for big models: modeled batch efficiency
+        # (8 cold batch-1 SLOs vs one cold bucket-8 SLO).  The measured
+        # interpret-mode wall clock is NOT the acceptance — CPU kernel
+        # emulation scales with rows, so batching shows ~1x there (0.87x
+        # for resnet18) while the TPU-model claim is >3x; the floor gate
+        # lives in check_regression.EFFICIENCY_FLOORS.
+        out[model] = {
+            "buckets": rows,
+            "modeled_batch_efficiency_b8": efficiency,
+        }
 
     if not dry_run:
         measured = _serving_measured(csv)

@@ -375,6 +375,23 @@ def serve_stream_cycles(
     return staging + compute + (batches - 1) * max(compute, staging)
 
 
+def queue_delay_cycles(batches: int, compute: int, staging: int) -> int:
+    """Modeled cycles a newly admitted request waits behind ``batches``
+    already-queued bucket executions before its own bucket can start.
+
+    Under the double-buffered steady state each queued bucket occupies the
+    engine for ``max(compute, staging)`` cycles (the stream period of
+    :func:`serve_stream_cycles`), so the wait is ``batches`` periods.  The
+    serving front end's admission control compares this (plus the request's
+    own bucket SLO) against the request's deadline: when the modeled wait
+    already blows the deadline, admitting the request only wastes a launch
+    on a result nobody can use — shed it at the door instead.
+    """
+    if batches <= 0:
+        return 0
+    return batches * max(compute, staging)
+
+
 def grid_pipeline_cycles(
     cells: int, body: int, input_dma: int, *, pipelined: bool
 ) -> int:

@@ -15,7 +15,11 @@ end-to-end CNN inference with machine-chosen fusion boundaries:
   FIFO admission through ``robust.validate.check_request``, pad-to-bucket
   execution through a plan+jit LRU cache keyed (graph, bucket, dtype),
   double-buffered host→device input staging, and per-bucket modeled-SLO vs
-  measured-latency reporting (DESIGN.md §14).
+  measured-latency reporting (DESIGN.md §14), plus the §15 resilience
+  layer: deadline/priority EDF admission with load shedding, a per-bucket
+  circuit breaker, a watchdog, and an output sentinel.
+* :mod:`repro.net.frontend` — the concurrent front end: thread-safe
+  ``submit`` returning Future-style handles, one background drain thread.
 """
 
 from .graph import MODELS, Graph, Node, fusable_segments, infer_shapes
@@ -41,6 +45,7 @@ _LAZY_SERVE = (
     "Request", "RequestResult", "ServeConfig", "ServingEngine",
     "bucket_for", "pad_to_bucket",
 )
+_LAZY_FRONTEND = ("RequestHandle", "ServingFrontend")
 
 
 def __getattr__(name: str):
@@ -48,6 +53,10 @@ def __getattr__(name: str):
         from . import serve
 
         return getattr(serve, name)
+    if name in _LAZY_FRONTEND:
+        from . import frontend
+
+        return getattr(frontend, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
@@ -58,9 +67,11 @@ __all__ = [
     "PartitionPlan",
     "PyramidPlan",
     "Request",
+    "RequestHandle",
     "RequestResult",
     "ServeConfig",
     "ServingEngine",
+    "ServingFrontend",
     "auto_partition",
     "bf16_logit_tol",
     "bucket_for",

@@ -6,19 +6,32 @@ fresh ``auto_partition`` DP and a fresh jit trace.  Sustained traffic is the
 opposite shape: many small requests, few distinct sizes.  This module turns
 the runner into a service (ROADMAP's continuous-batching item):
 
-* **Admission** — requests (single images or micro-batches) enter a FIFO
+* **Admission** — requests (single images or micro-batches) enter the
   queue through :func:`repro.robust.validate.check_request`: shape and
   finiteness are the per-request half of the preflight contract, so a
   poisoned request surfaces as a typed error *at submit* and never stalls
   or contaminates the queue (the plan/params half is validated once per
-  cache entry).
-* **Bucketing** — admitted rows are packed FIFO into power-of-two batch
-  **buckets** (:func:`bucket_for`) and padded to the bucket size
-  (:func:`pad_to_bucket`).  Batch elements are independent through every
-  conv/pool/dense/global-pool op, so the real rows of a padded batch are
-  **bit-identical** to running them unpadded under the same plan
-  (``tests/test_serve.py`` enforces this at f32 and bf16) — padding buys
-  shape reuse for free.
+  cache entry).  The submit path is **thread-safe** (one engine lock), so
+  N producer threads can feed one drain loop — the contract the
+  :mod:`repro.net.frontend` async layer builds on.
+* **Deadlines and priorities** — ``submit(x, deadline_us=, priority=)``
+  with ``ServeConfig(deadline_aware=True)`` turns the FIFO queue into an
+  earliest-deadline-first scheduler: higher priority first, then nearest
+  deadline.  A request whose modeled ETA (queue delay from
+  :func:`repro.core.cycle_model.queue_delay_cycles` plus its bucket's SLO,
+  scaled by the measured-vs-modeled calibration ratio) already blows its
+  deadline is **shed at admission** with a typed
+  :class:`~repro.robust.errors.DeadlineExceeded` — load shedding instead
+  of wasting a launch on a result nobody can use.  Requests that expire
+  while queued complete immediately with the same typed error and never
+  occupy a launch.
+* **Bucketing** — admitted rows are packed (FIFO, or EDF order when
+  deadline-aware) into power-of-two batch **buckets** (:func:`bucket_for`)
+  and padded to the bucket size (:func:`pad_to_bucket`).  Batch elements
+  are independent through every conv/pool/dense/global-pool op, so the
+  real rows of a padded batch are **bit-identical** to running them
+  unpadded under the same plan (``tests/test_serve.py`` enforces this at
+  f32 and bf16) — padding buys shape reuse for free.
 * **Plan + jit cache** — each bucket executes through one cache entry keyed
   ``(graph identity, vmem budget, bucket, dtype)``: the bucket-batch
   ``auto_partition`` plan (the DP costs launches at the *bucket's* batch,
@@ -35,12 +48,28 @@ the runner into a service (ROADMAP's continuous-batching item):
   ``jax.device_put`` (jax dispatch is asynchronous, so the host copy
   overlaps device compute).  The cost model twin is
   :func:`repro.core.cycle_model.serve_stream_cycles`.
+* **Failure containment** (DESIGN.md §15) — a launch that dies with a
+  typed :class:`~repro.robust.errors.RobustError` (including injected
+  staging failures) fails *its batch* typed and the queue keeps draining.
+  A **watchdog** (``watchdog_factor=N``) flags launches exceeding N× their
+  expected wall (the max of the modeled SLO and the bucket's measured
+  batch p50, so interpret-mode wall clocks calibrate it).  A per-key
+  **circuit breaker** (``breaker_threshold=K``,
+  :mod:`repro.robust.breaker`) opens after K consecutive failing launches
+  — fallback-laden guarded runs, watchdog trips, sentinel trips, or typed
+  errors — and pins the key to its last-good degraded rung (interpret or
+  reference) for a cooldown window; a half-open probe re-tries the fused
+  path.  An **output sentinel** (``output_sentinel=True``) catches
+  non-finite logits post-launch and re-serves the batch from the reference
+  walk — degraded-but-correct, never silent garbage.  All of it is off by
+  default: a default-config engine behaves exactly like the PR 9 engine.
 * **SLO + measurement** — each bucket publishes ``slo_us`` (modeled
   cold latency: host staging + the plan's ``modeled_us()``), ``steady_us``
   (the double-buffered steady state, ``max(compute, staging)``), and
   measured p50/p95 request latency + imgs/s; with a tracer installed
-  (``repro.obs.tracing``) every batch records a ``serve_batch`` event and
-  the cache bumps ``serve_cache_{hit,miss,eviction}`` counters.
+  (``repro.obs.tracing``) every batch records a ``serve_batch`` event, the
+  cache bumps ``serve_cache_{hit,miss,eviction}`` counters, and every
+  shed/expiry/watchdog/breaker/sentinel action records its own event.
 * **Degradation, not drops** — ``ServeConfig(guarded=True)`` runs each
   bucket under the PR 8 ladder (``repro.robust.guarding``): a VMEM miss
   replans, a numeric fault quarantines the launch to the reference path,
@@ -48,13 +77,16 @@ the runner into a service (ROADMAP's continuous-batching item):
 
 ``python -m repro.net.serve --model lenet --requests 32 --dry-stream``
 drives a deterministic two-wave synthetic stream and prints the
-bucket/SLO/throughput table (the CI smoke contract).
+bucket/SLO/throughput table (the CI smoke contract); ``--inject
+slow_launch --breaker 1 --watchdog 3`` arms a wave-2 fault and shows the
+breaker cycle in the summary (the CI chaos contract).
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import threading
 import time
 from collections import OrderedDict, deque
 from dataclasses import dataclass, field
@@ -66,18 +98,31 @@ import numpy as np
 from repro.core.cycle_model import (
     DEFAULT_PARAMS,
     host_staging_cycles,
+    queue_delay_cycles,
     serve_stream_cycles,
 )
 from repro.core.dtypes import DTYPE_BYTES, canonical_dtype
 from repro.core.program import VMEM_BUDGET_BYTES
+from repro.obs.stats import percentile
 from repro.obs.trace import get_tracer
-from repro.robust.errors import PreflightError, RobustError
+from repro.robust.breaker import CircuitBreaker
+from repro.robust.errors import (
+    DeadlineExceeded,
+    PreflightError,
+    RobustError,
+)
+from repro.robust.faults import get_injector
 from repro.robust.guard import GuardConfig, guarding
 from repro.robust.validate import check_request
 
 from .graph import Graph
 from .partition import PartitionPlan, auto_partition
-from .runner import Params, prepare_network_params, run_network
+from .runner import (
+    Params,
+    prepare_network_params,
+    reference_network,
+    run_network,
+)
 
 
 def bucket_for(rows: int, buckets: tuple[int, ...]) -> int:
@@ -124,7 +169,24 @@ class ServeConfig:
     under the degradation ladder; ``require_finite`` controls the admission
     NaN/Inf scan (shape checks always run).  ``max_queue`` bounds queued
     requests — an overfull queue rejects at submit (backpressure) instead
-    of growing without bound."""
+    of growing without bound.
+
+    The resilience knobs all default **off** (a default engine is the PR 9
+    engine):
+
+    * ``deadline_aware`` — EDF batch formation, queue-expiry sweeps, and
+      admission-time load shedding against modeled ETA.  ``shed_margin``
+      scales the modeled ETA before it is compared to the deadline (>1 is
+      more aggressive shedding).
+    * ``breaker_threshold`` / ``breaker_cooldown_s`` — per-(graph, bucket,
+      dtype) circuit breaker: K consecutive failing launches pin the key
+      to its last-good degraded rung for the cooldown window.
+    * ``watchdog_factor`` — flag launches whose wall clock exceeds N× the
+      expected batch wall (max of modeled SLO and the bucket's measured
+      p50 — the measured term calibrates interpret-mode wall clocks that
+      dwarf the 100 MHz model).
+    * ``output_sentinel`` — host-side finite check on every launch's
+      logits; a trip re-serves the batch from the reference walk."""
 
     buckets: tuple[int, ...] = (1, 2, 4, 8)
     plan_cache_size: int = 16
@@ -136,6 +198,12 @@ class ServeConfig:
     guarded: bool = False
     require_finite: bool = True
     max_queue: int = 1024
+    deadline_aware: bool = False
+    shed_margin: float = 1.0
+    breaker_threshold: int | None = None
+    breaker_cooldown_s: float = 5.0
+    watchdog_factor: float | None = None
+    output_sentinel: bool = False
 
     def __post_init__(self):
         if not self.buckets or list(self.buckets) != sorted(set(self.buckets)):
@@ -143,25 +211,49 @@ class ServeConfig:
                 f"buckets must be ascending and unique, got {self.buckets}",
                 buckets=list(self.buckets),
             )
+        if self.shed_margin <= 0:
+            raise PreflightError(
+                f"shed_margin must be positive, got {self.shed_margin}",
+                shed_margin=self.shed_margin,
+            )
+        if self.breaker_threshold is not None and self.breaker_threshold < 1:
+            raise PreflightError(
+                f"breaker_threshold must be >= 1, got"
+                f" {self.breaker_threshold}",
+                breaker_threshold=self.breaker_threshold,
+            )
+        if self.watchdog_factor is not None and self.watchdog_factor <= 1:
+            raise PreflightError(
+                f"watchdog_factor must exceed 1, got {self.watchdog_factor}",
+                watchdog_factor=self.watchdog_factor,
+            )
 
 
 @dataclass(frozen=True)
 class Request:
-    """One admitted unit of work: ``rows`` real images awaiting a bucket."""
+    """One admitted unit of work: ``rows`` real images awaiting a bucket.
+
+    ``deadline_s`` is the absolute ``time.perf_counter`` deadline computed
+    at admission from the caller's relative ``deadline_us`` (``None`` means
+    no deadline); ``priority`` orders EDF batches — higher runs first."""
 
     id: int
     x: np.ndarray  # (rows, H, W, C), host-side
     rows: int
     enqueue_s: float
+    deadline_us: float | None = None
+    deadline_s: float | None = None
+    priority: int = 0
 
 
 @dataclass(frozen=True)
 class RequestResult:
     """Terminal state of one submitted request.
 
-    Exactly one of ``logits``/``error`` is set: rejected requests carry the
-    typed :class:`~repro.robust.errors.RobustError` the admission check
-    raised (``bucket``/``latency_ms`` stay ``None``); completed requests
+    Exactly one of ``logits``/``error`` is set: rejected, shed, expired,
+    and failed requests carry the typed
+    :class:`~repro.robust.errors.RobustError` (``bucket``/``latency_ms``
+    stay ``None`` unless the request reached a launch); completed requests
     carry their real rows' logits and the enqueue→complete wall clock."""
 
     id: int
@@ -214,21 +306,35 @@ class _BucketStats:
     batches: int = 0
     wall_ms: float = 0.0
     latencies_ms: list = field(default_factory=list)
+    # clean per-batch walls only (watchdog-tripped walls are excluded so an
+    # injected stall cannot poison its own detection threshold)
+    batch_walls_ms: list = field(default_factory=list)
 
 
 def _percentile(values: list, q: float) -> float:
-    return float(np.percentile(np.asarray(values, dtype=np.float64), q))
+    # the shared obs.stats helper, kept under the historical name
+    return percentile(values, q)
+
+
+# absolute floor of the watchdog's expected batch wall: steady-state
+# interpret-mode walls are sub-millisecond once jax's jit cache is warm, and
+# N x a sub-millisecond p50 is scheduler noise, not a stuck launch — the
+# watchdog exists for launches stuck for 100s of ms, not 2 ms of jitter
+WATCHDOG_FLOOR_MS = 10.0
 
 
 class ServingEngine:
     """Continuous bucketed batching over one graph's fused-pyramid runner.
 
-    Single-threaded by design: ``submit`` admits (or rejects) requests into
-    the FIFO queue, ``drain`` forms buckets and executes them with the
-    double-buffered input stage, ``summary`` renders the bucket/SLO table.
-    The engine owns no device state beyond the staged batch — all heavy
-    reuse lives in the plan+jit cache, so two engines over the same graph
-    share compiled executables through jax's own cache.
+    ``submit`` admits (or rejects) requests under the engine lock — safe
+    from any thread; ``drain`` forms buckets and executes them with the
+    double-buffered input stage (one drain loop at a time — concurrent
+    drains serialize); ``summary`` renders the bucket/SLO table.  The
+    engine owns no device state beyond the staged batch — all heavy reuse
+    lives in the plan+jit cache, so two engines over the same graph share
+    compiled executables through jax's own cache.  Completion listeners
+    (:meth:`add_listener`) observe every terminal :class:`RequestResult` —
+    the hook :mod:`repro.net.frontend` turns into Future-style handles.
     """
 
     def __init__(
@@ -247,52 +353,138 @@ class ServingEngine:
         self._stats: dict[int, _BucketStats] = {}
         self._next_id = 0
         self.rejected = 0
+        self.resilience = {
+            "shed": 0, "expired": 0, "failed": 0,
+            "watchdog_trips": 0, "sentinel_trips": 0, "stalls": 0,
+        }
+        self._breakers: dict[tuple, CircuitBreaker] = {}
+        self._breaker_emitted: dict[tuple, int] = {}
+        self._listeners: list = []
+        self._lock = threading.RLock()
+        self._drain_lock = threading.Lock()
+
+    # -- listeners ----------------------------------------------------------
+
+    def add_listener(self, fn) -> None:
+        """Register ``fn(result)`` to be called with every terminal
+        :class:`RequestResult` — completions, rejections, sheds, expiries,
+        and batch failures alike.  Called under the engine lock, so
+        listeners must be cheap and must not re-enter ``drain``."""
+        with self._lock:
+            self._listeners.append(fn)
+
+    def _notify(self, result: RequestResult) -> None:
+        for fn in self._listeners:
+            fn(result)
 
     # -- admission ----------------------------------------------------------
 
-    def submit(self, x) -> int:
+    def submit(self, x, *, deadline_us: float | None = None,
+               priority: int = 0) -> int:
         """Admit one request (a ``(H, W, C)`` image or ``(rows, H, W, C)``
-        micro-batch); returns its request id.
+        micro-batch); returns its request id.  Thread-safe.
 
         A request that fails admission — wrong shape, non-finite pixels,
-        more rows than the largest bucket, or a full queue — is *rejected*,
-        not raised: its :class:`RequestResult` carries the typed error and
-        the queue keeps moving.  Callers poll :attr:`results`."""
-        rid = self._next_id
-        self._next_id += 1
-        x = np.asarray(x)
-        if x.ndim == 3:
-            x = x[None]
-        rows = int(x.shape[0]) if x.ndim == 4 else 0
-        try:
-            if len(self.queue) >= self.config.max_queue:
-                raise PreflightError(
-                    f"queue is full ({self.config.max_queue} requests);"
-                    " drain before submitting more",
-                    max_queue=self.config.max_queue,
+        more rows than the largest bucket, a full queue, or (when
+        ``deadline_aware``) a deadline the modeled queue ETA already blows
+        — is *rejected*, not raised: its :class:`RequestResult` carries the
+        typed error and the queue keeps moving.  Callers poll
+        :attr:`results` (or register a listener / use the frontend)."""
+        with self._lock:
+            rid = self._next_id
+            self._next_id += 1
+            x = np.asarray(x)
+            if x.ndim == 3:
+                x = x[None]
+            rows = int(x.shape[0]) if x.ndim == 4 else 0
+            now = time.perf_counter()
+            try:
+                if len(self.queue) >= self.config.max_queue:
+                    raise PreflightError(
+                        f"queue is full ({self.config.max_queue} requests);"
+                        " drain before submitting more",
+                        max_queue=self.config.max_queue, field="queue",
+                    )
+                bucket_for(max(rows, 1), self.config.buckets)
+                check_request(
+                    x, self.graph, require_finite=self.config.require_finite
                 )
-            bucket_for(max(rows, 1), self.config.buckets)
-            check_request(
-                x, self.graph, require_finite=self.config.require_finite
-            )
-        except RobustError as err:
-            self.rejected += 1
-            self.results[rid] = RequestResult(id=rid, rows=rows, error=err)
-            tracer = get_tracer()
-            if tracer.enabled:
-                tracer.bump("serve_reject")
-                tracer.record_event(
-                    "serve_reject", request=rid, rows=rows,
-                    error=type(err).__name__, message=str(err),
-                )
+                if self.config.deadline_aware and deadline_us is not None:
+                    eta_us = self._eta_us(rows)
+                    if eta_us * self.config.shed_margin > deadline_us:
+                        raise DeadlineExceeded(
+                            f"request shed at admission: modeled ETA"
+                            f" {eta_us:.0f}us blows the {deadline_us:.0f}us"
+                            " deadline",
+                            request=rid, eta_us=round(eta_us, 1),
+                            deadline_us=deadline_us,
+                        )
+            except RobustError as err:
+                self.rejected += 1
+                shed = isinstance(err, DeadlineExceeded)
+                if shed:
+                    self.resilience["shed"] += 1
+                result = RequestResult(id=rid, rows=rows, error=err)
+                self.results[rid] = result
+                tracer = get_tracer()
+                if tracer.enabled:
+                    tracer.bump("serve_shed" if shed else "serve_reject")
+                    tracer.record_event(
+                        "serve_shed" if shed else "serve_reject",
+                        request=rid, rows=rows,
+                        error=type(err).__name__, message=str(err),
+                    )
+                self._notify(result)
+                return rid
+            self.queue.append(Request(
+                id=rid, x=x, rows=rows, enqueue_s=now,
+                deadline_us=deadline_us,
+                deadline_s=(
+                    now + deadline_us * 1e-6
+                    if deadline_us is not None else None
+                ),
+                priority=priority,
+            ))
             return rid
-        self.queue.append(
-            Request(id=rid, x=x, rows=rows, enqueue_s=time.perf_counter())
-        )
-        return rid
 
     def submit_many(self, xs) -> list[int]:
         return [self.submit(x) for x in xs]
+
+    # -- deadline math ------------------------------------------------------
+
+    def _calibration(self) -> float:
+        """Worst observed measured-vs-modeled wall ratio across buckets
+        with traffic (1.0 before any batch lands).  The 100 MHz model
+        prices launches in microseconds; interpret-mode kernels take
+        milliseconds — this ratio maps modeled ETAs into the wall-clock
+        domain the deadlines live in."""
+        ratios = []
+        for b, st in self._stats.items():
+            entry = self._cache.get(self._key(b))
+            if entry is not None and st.batch_walls_ms:
+                ratios.append(
+                    percentile(st.batch_walls_ms, 50) * 1e3
+                    / max(entry.slo_us, 1e-9)
+                )
+        return max(ratios) if ratios else 1.0
+
+    def _eta_us(self, rows: int) -> float:
+        """Modeled completion ETA for a new ``rows``-row request: the queue
+        delay of the work already admitted (costed at the largest bucket's
+        steady period, :func:`queue_delay_cycles`) plus the request's own
+        bucket SLO, scaled by :meth:`_calibration`."""
+        bucket = bucket_for(max(rows, 1), self.config.buckets)
+        entry = self._entry(bucket)
+        limit = max(self.config.buckets)
+        queued_rows = sum(r.rows for r in self.queue)
+        wait_us = 0.0
+        if queued_rows:
+            big = self._entry(limit)
+            pending_batches = -(-queued_rows // limit)
+            wait_us = queue_delay_cycles(
+                pending_batches, big.compute_cycles, big.staging_cycles
+            ) / DEFAULT_PARAMS.freq_mhz
+        return self._calibration() * (wait_us + entry.slo_us)
 
     # -- plan + jit cache ---------------------------------------------------
 
@@ -302,39 +494,43 @@ class ServingEngine:
         return (self.graph, self.config.vmem_budget, bucket,
                 self.compute_dtype)
 
+    def _launch_name(self, bucket: int) -> str:
+        return f"serve:{self.graph.name}:bucket{bucket}"
+
     def _entry(self, bucket: int) -> _PlanEntry:
         key = self._key(bucket)
         tracer = get_tracer()
-        hit = key in self._cache
-        if hit:
-            self._cache.move_to_end(key)
-            self.cache_counters["hits"] += 1
-        else:
-            self.cache_counters["misses"] += 1
-            plan = auto_partition(
-                self.graph,
-                vmem_budget=self.config.vmem_budget,
-                batch=bucket,
-                prefer_region=self.config.prefer_region,
-                compute_dtype=self.compute_dtype,
-            )
-            prepared = prepare_network_params(plan, self.master_params)
-            in_bytes = DTYPE_BYTES[self.compute_dtype] * bucket * (
-                self.graph.input_size ** 2 * self.graph.in_channels
-            )
-            self._cache[key] = _PlanEntry(
-                bucket=bucket,
-                plan=plan,
-                prepared=prepared,
-                compute_cycles=plan.modeled_cycles(),
-                staging_cycles=host_staging_cycles(in_bytes),
-            )
-            while len(self._cache) > self.config.plan_cache_size:
-                self._cache.popitem(last=False)
-                self.cache_counters["evictions"] += 1
-                if tracer.enabled:
-                    tracer.bump("serve_cache_eviction")
-        entry = self._cache[key]
+        with self._lock:
+            hit = key in self._cache
+            if hit:
+                self._cache.move_to_end(key)
+                self.cache_counters["hits"] += 1
+            else:
+                self.cache_counters["misses"] += 1
+                plan = auto_partition(
+                    self.graph,
+                    vmem_budget=self.config.vmem_budget,
+                    batch=bucket,
+                    prefer_region=self.config.prefer_region,
+                    compute_dtype=self.compute_dtype,
+                )
+                prepared = prepare_network_params(plan, self.master_params)
+                in_bytes = DTYPE_BYTES[self.compute_dtype] * bucket * (
+                    self.graph.input_size ** 2 * self.graph.in_channels
+                )
+                self._cache[key] = _PlanEntry(
+                    bucket=bucket,
+                    plan=plan,
+                    prepared=prepared,
+                    compute_cycles=plan.modeled_cycles(),
+                    staging_cycles=host_staging_cycles(in_bytes),
+                )
+                while len(self._cache) > self.config.plan_cache_size:
+                    self._cache.popitem(last=False)
+                    self.cache_counters["evictions"] += 1
+                    if tracer.enabled:
+                        tracer.bump("serve_cache_eviction")
+            entry = self._cache[key]
         if tracer.enabled:
             tracer.bump("serve_cache_hit" if hit else "serve_cache_miss")
             tracer.record_event(
@@ -347,37 +543,159 @@ class ServingEngine:
             )
         return entry
 
+    # -- circuit breaker ----------------------------------------------------
+
+    def _breaker(self, bucket: int) -> CircuitBreaker | None:
+        if self.config.breaker_threshold is None:
+            return None
+        key = self._key(bucket)
+        with self._lock:
+            br = self._breakers.get(key)
+            if br is None:
+                br = CircuitBreaker(
+                    threshold=self.config.breaker_threshold,
+                    cooldown_s=self.config.breaker_cooldown_s,
+                )
+                self._breakers[key] = br
+            return br
+
+    def _flush_breaker(self, bucket: int, br: CircuitBreaker) -> None:
+        """Emit any breaker transitions not yet traced as ``serve_breaker``
+        events (the observable surface the chaos CI asserts on)."""
+        key = self._key(bucket)
+        with self._lock:
+            seen = self._breaker_emitted.get(key, 0)
+            fresh = br.transitions[seen:]
+            self._breaker_emitted[key] = len(br.transitions)
+        if not fresh:
+            return
+        tracer = get_tracer()
+        if tracer.enabled:
+            for t in fresh:
+                tracer.bump("serve_breaker_transition")
+                tracer.record_event(
+                    "serve_breaker",
+                    model=self.graph.name, bucket=bucket,
+                    from_state=t["from"], to_state=t["to"], why=t["why"],
+                    pinned_rung=br.pinned_rung,
+                )
+
+    @staticmethod
+    def _pin_rung(report, sentinel_tripped: bool) -> str | None:
+        """The rung to pin an opening breaker to, from what this launch
+        learned: sentinel trips and replan/reference fallbacks need the
+        reference walk; interpret/heal fallbacks pin the interpret path;
+        ``None`` (no ladder info) keeps the previous pin."""
+        if sentinel_tripped:
+            return "reference"
+        if report is not None and report.events:
+            rungs = {e.rung for e in report.events}
+            if rungs <= {"heal", "interpret"}:
+                return "interpret"
+            return "reference"
+        return None
+
     # -- execution ----------------------------------------------------------
 
     def _form_batch(self) -> list[Request] | None:
-        """Pop the next FIFO run of requests that fits the largest bucket.
+        """Pop the next run of requests that fits the largest bucket.
 
-        Strictly in admission order — no peeking past the head to fill a
-        bucket with later small requests, so a large request is never
-        starved by a stream of singles (the fairness property the tests
-        assert)."""
-        if not self.queue:
-            return None
-        batch, rows = [], 0
-        limit = max(self.config.buckets)
-        while self.queue and rows + self.queue[0].rows <= limit:
-            req = self.queue.popleft()
-            batch.append(req)
-            rows += req.rows
-        return batch
+        FIFO by default: strictly in admission order — no peeking past the
+        head to fill a bucket with later small requests, so a large request
+        is never starved by a stream of singles (the fairness property the
+        tests assert).  When ``deadline_aware``, expired requests are first
+        completed with :class:`DeadlineExceeded` (they never occupy a
+        launch), then the same no-skip packing runs over EDF order
+        (priority desc, deadline asc, id asc) — the nearest deadline is
+        never starved by later submissions."""
+        with self._lock:
+            if not self.config.deadline_aware:
+                if not self.queue:
+                    return None
+                batch, rows = [], 0
+                limit = max(self.config.buckets)
+                while self.queue and rows + self.queue[0].rows <= limit:
+                    req = self.queue.popleft()
+                    batch.append(req)
+                    rows += req.rows
+                return batch
+            now = time.perf_counter()
+            live = []
+            for req in self.queue:
+                if req.deadline_s is not None and now > req.deadline_s:
+                    self._expire(req, now)
+                else:
+                    live.append(req)
+            if not live:
+                self.queue = deque()
+                return None
+            order = sorted(live, key=lambda r: (
+                -r.priority,
+                r.deadline_s if r.deadline_s is not None else float("inf"),
+                r.id,
+            ))
+            batch, rows = [], 0
+            limit = max(self.config.buckets)
+            for req in order:
+                if rows + req.rows > limit:
+                    break
+                batch.append(req)
+                rows += req.rows
+            taken = {r.id for r in batch}
+            self.queue = deque(r for r in live if r.id not in taken)
+            return batch
+
+    def _expire(self, req: Request, now: float) -> None:
+        late_us = (now - req.deadline_s) * 1e6
+        err = DeadlineExceeded(
+            f"request {req.id} expired in queue {late_us:.0f}us past its"
+            " deadline",
+            request=req.id, late_us=round(late_us, 1),
+            deadline_us=req.deadline_us,
+        )
+        result = RequestResult(id=req.id, rows=req.rows, error=err)
+        self.results[req.id] = result
+        self.resilience["expired"] += 1
+        tracer = get_tracer()
+        if tracer.enabled:
+            tracer.bump("serve_expired")
+            tracer.record_event(
+                "serve_expired", request=req.id, rows=req.rows,
+                late_us=round(late_us, 1),
+            )
+        self._notify(result)
 
     def _stage(self, batch: list[Request]):
         """Pad the batch to its bucket and start the host→device copy —
         called for bucket ``n+1`` while bucket ``n`` computes, so the copy
-        overlaps compute (the double-buffered input stage)."""
+        overlaps compute (the double-buffered input stage).  The injected
+        ``stage`` fault fires here: a staging failure surfaces before any
+        device work, and the caller fails the batch typed."""
         rows = sum(r.rows for r in batch)
         bucket = bucket_for(rows, self.config.buckets)
         entry = self._entry(bucket)
+        inj = get_injector()
+        if inj.enabled:
+            inj.fire("stage", self._launch_name(bucket))
         host = np.concatenate([r.x for r in batch], axis=0)
         x_dev = jax.device_put(
             jnp.asarray(pad_to_bucket(host, bucket), dtype=jnp.float32)
         )
         return batch, bucket, entry, x_dev
+
+    def _next_staged(self):
+        """Form and stage the next batch, failing staging-faulted batches
+        typed and moving on — a poisoned batch never wedges the loop."""
+        while True:
+            batch = self._form_batch()
+            if batch is None:
+                return None
+            try:
+                return self._stage(batch)
+            except RobustError as err:
+                rows = sum(r.rows for r in batch)
+                bucket = bucket_for(rows, self.config.buckets)
+                self._fail_batch(batch, bucket, err)
 
     def _dispatch(self, entry: _PlanEntry, x_dev):
         if self.config.guarded:
@@ -393,26 +711,112 @@ class ServingEngine:
             interpret=self.config.interpret,
         )
 
-    def _record(self, batch, bucket, entry, logits, wall_ms) -> None:
+    def _run_route(self, route: str, entry: _PlanEntry, x_dev):
+        """Execute one staged bucket along ``route``; returns
+        ``(logits, report)`` where ``report`` is the guarded
+        :class:`~repro.robust.degrade.RunReport` (fused+guarded only).
+
+        Routes: ``fused`` is the normal path (guarded when configured);
+        ``interpret`` re-runs the same plan with interpret-mode kernels (a
+        lowering/compile quarantine); ``reference`` is the node-by-node
+        walk from the master params — no plan, no jit, degraded but
+        correct."""
+        if route == "reference":
+            return reference_network(
+                x_dev, self.graph, self.master_params
+            ), None
+        if route == "interpret":
+            logits, _ = run_network(
+                x_dev, entry.prepared, plan=entry.plan,
+                end_skip=self.config.end_skip, interpret=True,
+            )
+            return logits, None
+        if self.config.guarded:
+            with guarding(
+                GuardConfig(), source_params=self.master_params
+            ) as guard:
+                logits, _ = run_network(
+                    x_dev, entry.prepared, plan=entry.plan,
+                    end_skip=self.config.end_skip,
+                    interpret=self.config.interpret,
+                )
+                return logits, guard.last_report
+        logits, _ = run_network(
+            x_dev, entry.prepared, plan=entry.plan,
+            end_skip=self.config.end_skip,
+            interpret=self.config.interpret,
+        )
+        return logits, None
+
+    def _watchdog_threshold_ms(self, bucket: int, entry: _PlanEntry):
+        """Expected batch wall for the watchdog: the max of the modeled
+        SLO, the bucket's measured clean-batch p50, and
+        :data:`WATCHDOG_FLOOR_MS`.  ``None`` until the bucket has one
+        measured batch — the first launch calibrates (the modeled SLO
+        alone is microseconds at the 100 MHz model and would flag every
+        interpret-mode launch)."""
+        with self._lock:
+            st = self._stats.get(bucket)
+            walls = list(st.batch_walls_ms) if st is not None else []
+        if not walls:
+            return None
+        return max(
+            entry.slo_us / 1e3, percentile(walls, 50), WATCHDOG_FLOOR_MS
+        )
+
+    def _fail_batch(
+        self, batch: list[Request], bucket: int, err: RobustError,
+        wall_ms: float | None = None,
+    ) -> None:
+        """Complete every request of a failed batch with the typed error —
+        the batch is terminal, the queue keeps draining."""
+        with self._lock:
+            for req in batch:
+                result = RequestResult(
+                    id=req.id, rows=req.rows, bucket=bucket, error=err,
+                )
+                self.results[req.id] = result
+                self._notify(result)
+            self.resilience["failed"] += len(batch)
+        tracer = get_tracer()
+        if tracer.enabled:
+            tracer.bump("serve_batch_error")
+            tracer.record_event(
+                "serve_batch_error",
+                model=self.graph.name, bucket=bucket,
+                requests=len(batch), error=type(err).__name__,
+                message=str(err),
+                wall_ms=wall_ms,
+            )
+
+    def _record(
+        self, batch, bucket, entry, logits, wall_ms, *,
+        route: str = "fused", calibrate: bool = True,
+    ) -> None:
         done_s = time.perf_counter()
         host_logits = np.asarray(logits)
-        stats = self._stats.setdefault(bucket, _BucketStats())
-        stats.batches += 1
-        stats.wall_ms += wall_ms
-        row = 0
-        for req in batch:
-            lat_ms = (done_s - req.enqueue_s) * 1e3
-            self.results[req.id] = RequestResult(
-                id=req.id,
-                rows=req.rows,
-                bucket=bucket,
-                logits=host_logits[row: row + req.rows],
-                latency_ms=lat_ms,
-            )
-            row += req.rows
-            stats.requests += 1
-            stats.images += req.rows
-            stats.latencies_ms.append(lat_ms)
+        with self._lock:
+            stats = self._stats.setdefault(bucket, _BucketStats())
+            stats.batches += 1
+            stats.wall_ms += wall_ms
+            if calibrate:
+                stats.batch_walls_ms.append(wall_ms)
+            row = 0
+            for req in batch:
+                lat_ms = (done_s - req.enqueue_s) * 1e3
+                result = RequestResult(
+                    id=req.id,
+                    rows=req.rows,
+                    bucket=bucket,
+                    logits=host_logits[row: row + req.rows],
+                    latency_ms=lat_ms,
+                )
+                self.results[req.id] = result
+                row += req.rows
+                stats.requests += 1
+                stats.images += req.rows
+                stats.latencies_ms.append(lat_ms)
+                self._notify(result)
         tracer = get_tracer()
         if tracer.enabled:
             tracer.record_event(
@@ -420,29 +824,121 @@ class ServingEngine:
                 model=self.graph.name, bucket=bucket,
                 requests=len(batch), rows=row,
                 wall_ms=wall_ms, slo_us=entry.slo_us,
+                route=route,
             )
 
     def drain(self) -> list[RequestResult]:
-        """Execute the queue to empty; returns completed results in order.
+        """Execute the queue to empty; returns the drained batches' results
+        in completion order (failed batches included, with typed errors).
 
         The loop is the double-buffered pipeline: dispatch bucket ``n``
         (jax runs it asynchronously), immediately stage bucket ``n+1``'s
         padded host batch onto the device, then block on ``n`` — the
         ``n+1`` copy rides under ``n``'s compute, the host analogue of the
-        kernel's revolving input prefetch."""
+        kernel's revolving input prefetch.  Around that PR 9 core sit the
+        resilience hooks (each a no-op unless configured/armed): injected
+        queue stalls, breaker routing, the slow-launch delay, the output
+        sentinel, the watchdog, and typed batch failure."""
         completed: list[RequestResult] = []
-        nxt = self._form_batch()
-        staged = self._stage(nxt) if nxt else None
-        while staged is not None:
-            batch, bucket, entry, x_dev = staged
-            t0 = time.perf_counter()
-            logits, _ = self._dispatch(entry, x_dev)
-            nxt = self._form_batch()
-            staged = self._stage(nxt) if nxt else None
-            jax.block_until_ready(logits)
-            wall_ms = (time.perf_counter() - t0) * 1e3
-            self._record(batch, bucket, entry, logits, wall_ms)
-            completed.extend(self.results[r.id] for r in batch)
+        inj = get_injector()
+        with self._drain_lock:
+            staged = self._next_staged()
+            while staged is not None:
+                if inj.enabled and inj.queue_stalled():
+                    with self._lock:
+                        self.resilience["stalls"] += 1
+                    tracer = get_tracer()
+                    if tracer.enabled:
+                        tracer.bump("serve_stall")
+                        tracer.record_event(
+                            "serve_stall", model=self.graph.name
+                        )
+                    time.sleep(0.001)
+                    continue
+                batch, bucket, entry, x_dev = staged
+                breaker = self._breaker(bucket)
+                route = "fused"
+                if breaker is not None and not breaker.allow():
+                    route = breaker.pinned_rung or "reference"
+                t0 = time.perf_counter()
+                err: RobustError | None = None
+                logits = report = None
+                try:
+                    logits, report = self._run_route(route, entry, x_dev)
+                except RobustError as e:
+                    err = e
+                staged_next = self._next_staged()
+                sentinel_tripped = False
+                if err is None:
+                    jax.block_until_ready(logits)
+                    if inj.enabled:
+                        delay = inj.launch_delay(self._launch_name(bucket))
+                        if delay:
+                            time.sleep(delay)
+                        if route == "fused":
+                            logits = inj.corrupt_output(
+                                self._launch_name(bucket), logits
+                            )
+                    if self.config.output_sentinel and not np.isfinite(
+                        np.asarray(logits, dtype=np.float32)
+                    ).all():
+                        sentinel_tripped = True
+                        with self._lock:
+                            self.resilience["sentinel_trips"] += 1
+                        tracer = get_tracer()
+                        if tracer.enabled:
+                            tracer.bump("serve_sentinel_trip")
+                            tracer.record_event(
+                                "serve_sentinel",
+                                model=self.graph.name, bucket=bucket,
+                                route=route, action="reference_retry",
+                            )
+                        logits = self._run_route(
+                            "reference", entry, x_dev
+                        )[0]
+                        jax.block_until_ready(logits)
+                wall_ms = (time.perf_counter() - t0) * 1e3
+                wd_tripped = False
+                if (err is None
+                        and self.config.watchdog_factor is not None):
+                    thresh_ms = self._watchdog_threshold_ms(bucket, entry)
+                    if (thresh_ms is not None and wall_ms
+                            > self.config.watchdog_factor * thresh_ms):
+                        wd_tripped = True
+                        with self._lock:
+                            self.resilience["watchdog_trips"] += 1
+                        tracer = get_tracer()
+                        if tracer.enabled:
+                            tracer.bump("serve_watchdog_trip")
+                            tracer.record_event(
+                                "serve_watchdog",
+                                model=self.graph.name, bucket=bucket,
+                                wall_ms=wall_ms,
+                                threshold_ms=(
+                                    self.config.watchdog_factor * thresh_ms
+                                ),
+                                route=route,
+                            )
+                if breaker is not None and route == "fused":
+                    degraded = report is not None and report.degraded
+                    if (err is not None or wd_tripped or sentinel_tripped
+                            or degraded):
+                        breaker.record_failure(
+                            rung=self._pin_rung(report, sentinel_tripped)
+                        )
+                    else:
+                        breaker.record_success()
+                    self._flush_breaker(bucket, breaker)
+                if err is not None:
+                    self._fail_batch(batch, bucket, err, wall_ms)
+                else:
+                    self._record(
+                        batch, bucket, entry, logits, wall_ms,
+                        route=route,
+                        calibrate=not (wd_tripped or sentinel_tripped),
+                    )
+                completed.extend(self.results[r.id] for r in batch)
+                staged = staged_next
         return completed
 
     def serve(self, xs) -> list[RequestResult]:
@@ -465,54 +961,73 @@ class ServingEngine:
         """The bucket/SLO/throughput table as one JSON-safe dict — modeled
         (``slo_us``/``steady_us``/``modeled_cycles``) next to measured
         (``p50_ms``/``p95_ms``/``imgs_per_s``) per bucket, plus the serve
-        and partition cache counters (DESIGN.md §14's observable surface)."""
+        and partition cache counters and the resilience section (shed /
+        expired / failed / watchdog / sentinel / stall counts and one
+        breaker snapshot per bucket) — DESIGN.md §14/§15's observable
+        surface."""
         from .partition import partition_cache_info
         from .runner import jit_trace_count
 
-        rows = []
-        for bucket in sorted(self._stats):
-            st = self._stats[bucket]
-            entry = self._cache.get(self._key(bucket))
-            row = {
-                "bucket": bucket,
-                "batches": st.batches,
-                "requests": st.requests,
-                "images": st.images,
-                "p50_ms": _percentile(st.latencies_ms, 50),
-                "p95_ms": _percentile(st.latencies_ms, 95),
-                "imgs_per_s": (
-                    st.images / (st.wall_ms / 1e3) if st.wall_ms else 0.0
-                ),
-            }
-            if entry is not None:  # evicted entries lose their model columns
-                row.update(
-                    slo_us=entry.slo_us,
-                    steady_us=entry.steady_us,
-                    modeled_cycles=entry.compute_cycles,
-                    staging_cycles=entry.staging_cycles,
-                    launches=entry.plan.n_launches(),
-                    hbm_bytes=entry.plan.hbm_bytes(),
+        with self._lock:
+            rows = []
+            for bucket in sorted(self._stats):
+                st = self._stats[bucket]
+                entry = self._cache.get(self._key(bucket))
+                row = {
+                    "bucket": bucket,
+                    "batches": st.batches,
+                    "requests": st.requests,
+                    "images": st.images,
+                    "p50_ms": _percentile(st.latencies_ms, 50),
+                    "p95_ms": _percentile(st.latencies_ms, 95),
+                    "imgs_per_s": (
+                        st.images / (st.wall_ms / 1e3) if st.wall_ms else 0.0
+                    ),
+                }
+                if entry is not None:  # evicted entries lose model columns
+                    row.update(
+                        slo_us=entry.slo_us,
+                        steady_us=entry.steady_us,
+                        modeled_cycles=entry.compute_cycles,
+                        staging_cycles=entry.staging_cycles,
+                        launches=entry.plan.n_launches(),
+                        hbm_bytes=entry.plan.hbm_bytes(),
+                    )
+                rows.append(row)
+            total_images = sum(st.images for st in self._stats.values())
+            total_wall_ms = sum(st.wall_ms for st in self._stats.values())
+            from dataclasses import asdict
+
+            breakers = {
+                str(key[2]): asdict(br.snapshot())
+                for key, br in sorted(
+                    self._breakers.items(), key=lambda kv: kv[0][2]
                 )
-            rows.append(row)
-        total_images = sum(st.images for st in self._stats.values())
-        total_wall_ms = sum(st.wall_ms for st in self._stats.values())
-        return {
-            "model": self.graph.name,
-            "compute_dtype": self.compute_dtype,
-            "guarded": self.config.guarded,
-            "buckets": rows,
-            "completed": sum(1 for r in self.results.values() if r.ok),
-            "rejected": self.rejected,
-            "images": total_images,
-            "imgs_per_s": (
-                total_images / (total_wall_ms / 1e3) if total_wall_ms else 0.0
-            ),
-            "cache": {
-                "serve": self.cache_info(),
-                "partition": partition_cache_info()._asdict(),
-                "jit_traces": jit_trace_count(),
-            },
-        }
+            }
+            return {
+                "model": self.graph.name,
+                "compute_dtype": self.compute_dtype,
+                "guarded": self.config.guarded,
+                "buckets": rows,
+                "completed": sum(
+                    1 for r in self.results.values() if r.ok
+                ),
+                "rejected": self.rejected,
+                "images": total_images,
+                "imgs_per_s": (
+                    total_images / (total_wall_ms / 1e3)
+                    if total_wall_ms else 0.0
+                ),
+                "cache": {
+                    "serve": self.cache_info(),
+                    "partition": partition_cache_info()._asdict(),
+                    "jit_traces": jit_trace_count(),
+                },
+                "resilience": {
+                    **self.resilience,
+                    "breakers": breakers,
+                },
+            }
 
 
 # ---------------------------------------------------------------------------
@@ -552,6 +1067,26 @@ def _cache_snapshot(engine: ServingEngine) -> dict:
     }
 
 
+INJECT_MODES = ("slow_launch", "stage_fail", "poison", "stall")
+
+
+def _armed_injector(mode: str, seed: int, breaker: int | None):
+    """A :class:`FaultInjector` armed for the chosen chaos mode — fired
+    during wave 2 only, so wave 1 calibrates the watchdog first."""
+    from repro.robust.faults import FaultInjector
+
+    inj = FaultInjector(seed=seed)
+    if mode == "slow_launch":
+        inj.slow_launch(0.25, times=max(breaker or 1, 1))
+    elif mode == "stage_fail":
+        inj.raise_at("stage", times=2, message="injected device_put failure")
+    elif mode == "poison":
+        inj.poison_output(times=2)
+    elif mode == "stall":
+        inj.stall_queue(3)
+    return inj
+
+
 def main(argv=None) -> int:
     from .graph import MODELS
     from .runner import init_network_params
@@ -577,6 +1112,22 @@ def main(argv=None) -> int:
     ap.add_argument("--dry-stream", action="store_true",
                     help="deterministic in-process stream sized for CI"
                     " smoke (interpret-mode kernels)")
+    ap.add_argument("--inject", default=None, choices=INJECT_MODES,
+                    help="arm a serving fault for wave 2 (wave 1 stays"
+                    " clean to calibrate the watchdog); implies breaker 1,"
+                    " watchdog 3, and the output sentinel unless given")
+    ap.add_argument("--breaker", type=int, default=None, metavar="K",
+                    help="open the per-bucket circuit breaker after K"
+                    " consecutive failing launches")
+    ap.add_argument("--breaker-cooldown", type=float, default=0.0,
+                    metavar="S", help="breaker cooldown seconds before the"
+                    " half-open probe (default 0: probe immediately)")
+    ap.add_argument("--watchdog", type=float, default=None, metavar="N",
+                    help="flag launches exceeding N x the expected batch"
+                    " wall (modeled SLO or measured p50)")
+    ap.add_argument("--deadline-us", type=float, default=None,
+                    help="submit every request with this relative deadline"
+                    " (enables deadline-aware EDF admission)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the summary (with per-wave cache deltas)"
                     " as JSON")
@@ -585,22 +1136,46 @@ def main(argv=None) -> int:
     kwargs = {"input_size": args.input} if args.input else {}
     graph = MODELS[args.model](**kwargs)
     buckets = tuple(int(b) for b in args.buckets.split(","))
+    breaker = args.breaker
+    watchdog = args.watchdog
+    sentinel = False
+    if args.inject is not None:
+        breaker = 1 if breaker is None else breaker
+        watchdog = 3.0 if watchdog is None else watchdog
+        sentinel = args.inject == "poison"
     config = ServeConfig(
         buckets=buckets,
         compute_dtype=args.dtype,
         guarded=args.guarded,
         interpret=True if args.dry_stream else None,
+        deadline_aware=args.deadline_us is not None,
+        breaker_threshold=breaker,
+        breaker_cooldown_s=args.breaker_cooldown,
+        watchdog_factor=watchdog,
+        output_sentinel=sentinel,
     )
     params = init_network_params(graph, jax.random.PRNGKey(args.seed))
     engine = ServingEngine(graph, params, config)
     stream = _synthetic_stream(graph, args.requests, buckets, args.seed)
 
+    from contextlib import nullcontext
+
+    from repro.robust.faults import inject
+
     waves = []
     for wave in (1, 2):
+        chaos = (
+            inject(injector=_armed_injector(
+                args.inject, args.seed, breaker
+            ))
+            if args.inject is not None and wave == 2 else nullcontext()
+        )
         before = _cache_snapshot(engine)
         t0 = time.perf_counter()
-        engine.submit_many(stream)
-        engine.drain()
+        with chaos:
+            for x in stream:
+                engine.submit(x, deadline_us=args.deadline_us)
+            engine.drain()
         wall_s = time.perf_counter() - t0
         delta = _wave_delta(before, _cache_snapshot(engine))
         delta["wall_s"] = wall_s
@@ -608,6 +1183,8 @@ def main(argv=None) -> int:
 
     summary = engine.summary()
     summary["waves"] = waves
+    summary["submitted"] = 2 * len(stream)
+    summary["terminal"] = len(engine.results)
 
     from repro.obs.explain import serve_table
 

@@ -21,6 +21,7 @@ did, so the model-vs-hardware loop can be closed (ROADMAP).  Pieces:
 See DESIGN.md §12 for the span schema and the timeline format.
 """
 
+from .stats import percentile, timed_stats_ms
 from .timeline import chrome_trace, validate_chrome_trace, write_chrome_trace
 from .trace import (
     LaunchSpan,
@@ -54,7 +55,9 @@ __all__ = [
     "drift_rows_from_bench",
     "drift_rows_from_spans",
     "get_tracer",
+    "percentile",
     "set_tracer",
+    "timed_stats_ms",
     "tracing",
     "validate_chrome_trace",
     "write_chrome_trace",

@@ -116,6 +116,30 @@ def serve_table(summary: dict, out=print) -> None:
         f"{cache['partition']['evictions']}e, "
         f"jit traces {cache['jit_traces']}"
     )
+    res = summary.get("resilience")
+    if res is not None:
+        counters = {
+            k: v for k, v in res.items()
+            if k != "breakers" and v
+        }
+        breakers = res.get("breakers") or {}
+        active = {
+            b: s for b, s in breakers.items()
+            if s["transitions"] or s["state"] != "closed"
+        }
+        if counters or active:
+            out(
+                "resilience: "
+                + ", ".join(f"{k}={v}" for k, v in counters.items())
+                if counters else "resilience:"
+            )
+            for b, s in sorted(active.items(), key=lambda kv: int(kv[0])):
+                pin = f" pinned={s['pinned_rung']}" if s["pinned_rung"] else ""
+                out(
+                    f"  breaker bucket {b}: {s['state']}"
+                    f" ({s['opens']} opens, {s['transitions']} transitions,"
+                    f" {s['failures']}/{s['threshold']} failures){pin}"
+                )
     for i, wave in enumerate(summary.get("waves", []), start=1):
         out(
             f"wave {i}: +{wave['serve_misses']} plans, "

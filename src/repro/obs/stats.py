@@ -1,0 +1,61 @@
+"""Shared wall-clock statistics helpers.
+
+Percentile math used to live twice — ``net/serve.py`` computed request
+latency p50/p95 through ``np.percentile`` while ``benchmarks/run.py``
+re-implemented the same linear interpolation in stdlib for its timed-rep
+stats dicts.  One definition lives here so the serving summary and the
+benchmark JSON agree on what "p95" means (linear interpolation between
+closest ranks, the numpy default), and so new consumers (the serving
+front end's deadline accounting) do not grow a third copy.
+
+Import-light on purpose: stdlib only, no numpy/jax — the serving admission
+path calls :func:`percentile` per drain and the benchmark harness calls it
+between timed reps; neither should pay an import or an array round-trip
+for a handful of floats.
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+
+__all__ = ["percentile", "timed_stats_ms"]
+
+
+def percentile(values, q: float) -> float:
+    """Linear-interpolated ``q``-th percentile of ``values`` (0 <= q <= 100).
+
+    Matches ``np.percentile``'s default (linear interpolation between the
+    two closest ranks) for any non-empty sequence of floats.  Raises
+    ``ValueError`` on an empty sequence — callers decide what an absent
+    sample means (the serving summary only renders buckets with traffic).
+    """
+    xs = sorted(float(v) for v in values)
+    if not xs:
+        raise ValueError("percentile of empty sequence")
+    idx = q / 100.0 * (len(xs) - 1)
+    lo = int(idx)
+    hi = min(lo + 1, len(xs) - 1)
+    return xs[lo] + (xs[hi] - xs[lo]) * (idx - lo)
+
+
+def timed_stats_ms(fn, reps: int = 5) -> dict:
+    """Wall-clock stats over ``reps`` timed calls of ``fn`` (which must
+    block until its results are ready), after one untimed warm-up call that
+    absorbs jit compilation — single-shot numbers are scheduler noise.
+
+    Returns ``{"p50_ms", "p95_ms", "reps"}``; benchmark wall-clock metrics
+    record this dict alongside their median scalar so the trajectory
+    carries tail latency too.
+    """
+    fn()  # warm-up: jit cache + device transfer
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e3)
+    return {
+        "p50_ms": statistics.median(times),
+        "p95_ms": percentile(times, 95.0),
+        "reps": reps,
+    }

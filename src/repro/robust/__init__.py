@@ -23,7 +23,11 @@ lowering failure surfaces as an opaque deep traceback.  This package wraps
   node-by-node reference segment.  Every fallback is recorded in the
   returned :class:`RunReport` and as an ``obs`` trace event.
 * :mod:`repro.robust.faults` — the seeded fault-injection harness the chaos
-  suite uses to prove every rung terminates at the reference path.
+  suite uses to prove every rung terminates at the reference path (and, for
+  the serving chaos suite, slow launches / staging failures / queue stalls).
+* :mod:`repro.robust.breaker` — the per-key circuit breaker the serving
+  engine uses to pin a repeatedly-failing (graph, bucket, dtype) key to its
+  last-good degraded rung for a cooldown window.
 
 Only :mod:`repro.robust.errors` is imported eagerly (it is dependency-free
 and ``repro.core`` raises from it); everything else loads lazily so
@@ -32,6 +36,7 @@ and ``repro.core`` raises from it); everything else loads lazily so
 
 from .errors import (
     BudgetError,
+    DeadlineExceeded,
     FaultInjected,
     NumericError,
     PlanError,
@@ -53,6 +58,8 @@ _LAZY = {
     "corrupt_params": "faults",
     "get_injector": "faults",
     "inject": "faults",
+    "CircuitBreaker": "breaker",
+    "BreakerSnapshot": "breaker",
 }
 
 
@@ -66,7 +73,10 @@ def __getattr__(name: str):
 
 
 __all__ = [
+    "BreakerSnapshot",
     "BudgetError",
+    "CircuitBreaker",
+    "DeadlineExceeded",
     "FallbackEvent",
     "FaultInjected",
     "FaultInjector",

@@ -21,6 +21,8 @@ dispatch on *what went wrong* instead of parsing a traceback:
   sentinel.  Subclasses ``FloatingPointError``.  Carries the offending
   ``nodes`` / ``launch`` / ``level`` so the fault is localized, not just
   detected.
+* :class:`DeadlineExceeded` — a serving request missed its deadline (shed
+  at admission or expired in the queue).  Subclasses ``TimeoutError``.
 * :class:`FaultInjected` — raised only by the deterministic fault harness
   (:mod:`repro.robust.faults`); never by production code.
 
@@ -70,7 +72,16 @@ class NumericError(RobustError, FloatingPointError):
     sentinel (``context['launch']`` / ``context['level']``)."""
 
 
+class DeadlineExceeded(RobustError, TimeoutError):
+    """A serving request's deadline passed before (or instead of) useful
+    work: shed at admission because the modeled queue delay already blows
+    the deadline (``context['eta_us']`` vs ``context['deadline_us']``), or
+    expired in the queue and completed without occupying a launch
+    (``context['late_us']``).  Subclasses ``TimeoutError`` — a blown
+    deadline is a timeout, whatever stage noticed it."""
+
+
 class FaultInjected(RobustError, RuntimeError):
     """An exception planted by the deterministic fault-injection harness
     (:mod:`repro.robust.faults`).  ``context['stage']`` names the stage it
-    fired at (``plan`` / ``compile`` / ``run``)."""
+    fired at (``plan`` / ``compile`` / ``run`` / ``stage``)."""

@@ -24,6 +24,17 @@ Fault classes (mirroring the ladder's rungs):
   launch's output with NaN/Inf after the kernel ran (models a kernel
   miscompute).  Caught by the runtime numeric sentinel → quarantine.
 
+Serving fault classes (consumed by ``net/serve.py``'s engine, proved by
+``tests/test_serve_chaos.py``):
+
+* ``FaultInjector.slow_launch`` — a stuck launch: the host sleeps before
+  consuming a matching launch's result.  Caught by the serving watchdog
+  (wall clock vs N× modeled SLO) → escalation + breaker failure.
+* ``raise_at("stage", ...)`` — a host→device staging (``jax.device_put``)
+  failure; the affected batch fails typed, the queue keeps draining.
+* ``FaultInjector.stall_queue`` — the drain loop skips scheduling turns
+  (bounded); requests stay queued, nothing is lost or reordered.
+
 Use::
 
     from repro.robust import inject
@@ -44,7 +55,9 @@ import numpy as np
 
 from .errors import FaultInjected
 
-STAGES = ("plan", "compile", "run")
+# "stage" is the serving engine's host→device staging copy; the guarded
+# runner itself only consults plan/compile/run
+STAGES = ("plan", "compile", "run", "stage")
 
 
 def _match(pattern: str | None, launch: str) -> bool:
@@ -102,6 +115,13 @@ class _PlannedPoison:
 
 
 @dataclass
+class _PlannedDelay:
+    launch: str | None
+    delay_s: float
+    times: int
+
+
+@dataclass
 class FaultInjector:
     """Armed faults + a deterministic fire log.
 
@@ -115,6 +135,8 @@ class FaultInjector:
     vmem_factor: float = 1.0
     raises: list = field(default_factory=list)
     poisons: list = field(default_factory=list)
+    delays: list = field(default_factory=list)
+    stalls: int = 0
     fired: list = field(default_factory=list)
 
     # -- arming ------------------------------------------------------------
@@ -149,6 +171,29 @@ class FaultInjector:
             raise ValueError(f"factor must be in (0, 1], got {factor}")
         self.vmem_factor = factor
 
+    def slow_launch(
+        self,
+        delay_s: float,
+        *,
+        launch: str | None = None,
+        times: int = 1,
+    ) -> None:
+        """Arm a stuck launch: matching launches sleep ``delay_s`` seconds
+        on the host before their result is consumed, firing ``times``
+        times.  The serving watchdog must notice the wall clock blowing
+        past the modeled SLO and escalate."""
+        if delay_s <= 0:
+            raise ValueError(f"delay_s must be positive, got {delay_s}")
+        self.delays.append(_PlannedDelay(launch, delay_s, times))
+
+    def stall_queue(self, times: int = 1) -> None:
+        """Arm ``times`` drain-loop stalls: the serving drain loop skips a
+        scheduling turn per stall (work stays queued, nothing is lost) —
+        models a scheduler hiccup that must not hang or drop requests."""
+        if times < 1:
+            raise ValueError(f"times must be >= 1, got {times}")
+        self.stalls += times
+
     # -- consumption (guarded runner only) ---------------------------------
 
     def fire(self, stage: str, launch: str) -> None:
@@ -159,6 +204,24 @@ class FaultInjector:
                 pr.times -= 1
                 self.fired.append((stage, launch, "raise"))
                 raise FaultInjected(pr.message, stage=stage, launch=launch)
+
+    def launch_delay(self, launch: str) -> float:
+        """Seconds the armed stuck-launch fault wants ``launch`` delayed
+        (0.0 when nothing matches); decrements the fire count."""
+        for pd in self.delays:
+            if pd.times > 0 and _match(pd.launch, launch):
+                pd.times -= 1
+                self.fired.append(("slow", launch, f"{pd.delay_s}s"))
+                return pd.delay_s
+        return 0.0
+
+    def queue_stalled(self) -> bool:
+        """Consume one armed drain-loop stall if any remain."""
+        if self.stalls > 0:
+            self.stalls -= 1
+            self.fired.append(("stall", "<queue>", "skip"))
+            return True
+        return False
 
     def corrupt_output(self, launch: str, y):
         """Return ``y`` with seeded poison applied if armed for ``launch``,
@@ -189,6 +252,12 @@ class _NullInjector:
 
     def fire(self, stage: str, launch: str) -> None:
         pass
+
+    def launch_delay(self, launch: str) -> float:
+        return 0.0
+
+    def queue_stalled(self) -> bool:
+        return False
 
     def corrupt_output(self, launch: str, y):
         return y

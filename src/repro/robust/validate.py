@@ -31,6 +31,8 @@ never pays for it.
 
 from __future__ import annotations
 
+import warnings
+
 import jax.numpy as jnp
 import numpy as np
 
@@ -60,27 +62,38 @@ def _resolve_dtype(plan, dtype) -> str:
 
 
 def _check_input(x, graph) -> None:
+    # every rejection names the offending field machine-readably: serving
+    # callers surface ``err.context["field"]`` to the client
     if getattr(x, "ndim", None) != 4:
         raise PreflightError(
             f"input must be a (B, H, W, C) batch, got shape"
             f" {getattr(x, 'shape', None)}",
-            graph=graph.name,
+            graph=graph.name, field="rank",
         )
     b, h, w, c = x.shape
     if b < 1:
-        raise PreflightError("input batch is empty", graph=graph.name)
+        raise PreflightError(
+            "input batch is empty", graph=graph.name, field="batch",
+        )
     if h != graph.input_size or w != graph.input_size:
         raise PreflightError(
             f"input spatial dims {h}x{w} do not match graph"
             f" {graph.name}'s {graph.input_size}x{graph.input_size}",
-            graph=graph.name,
+            graph=graph.name, field="spatial",
         )
     if c != graph.in_channels:
         raise PreflightError(
             f"input has {c} channels, graph {graph.name} expects"
             f" {graph.in_channels}",
-            graph=graph.name,
+            graph=graph.name, field="channels",
         )
+
+
+def _fits_f32(arr: np.ndarray) -> bool:
+    """Do all (finite) wide-float values survive the cast to float32?"""
+    with np.errstate(over="ignore"), warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        return bool(np.isfinite(arr.astype(np.float32)).all())
 
 
 def check_request(x, graph, *, require_finite: bool = True) -> None:
@@ -91,20 +104,50 @@ def check_request(x, graph, *, require_finite: bool = True) -> None:
     builds a cache entry, but *every* request body is untrusted — shape
     agreement with the graph and (``require_finite``) input finiteness are
     the two properties a queued request can individually violate.  Raises
-    :class:`PreflightError` on shape problems and :class:`NumericError` on
-    NaN/Inf pixels, both cheap O(input) host-side checks (numpy, never a
-    jax dispatch — admission runs per request on the serving hot path), so
-    a poisoned request is rejected at the queue door instead of inside a
-    padded bucket where its rows would sit next to healthy traffic.
+    :class:`PreflightError` on shape/dtype problems and
+    :class:`NumericError` on NaN/Inf pixels (or f64 values that overflow
+    the f32 compute dtype), both cheap O(input) host-side checks (numpy,
+    never a jax dispatch — admission runs per request on the serving hot
+    path), so a poisoned request is rejected at the queue door instead of
+    inside a padded bucket where its rows would sit next to healthy
+    traffic.  Every rejection's ``context`` carries a ``field`` key naming
+    the offending property (``rank`` / ``batch`` / ``spatial`` /
+    ``channels`` / ``dtype`` / ``values`` / ``range``).
     """
     _check_input(x, graph)
-    if require_finite and not np.isfinite(
-        np.asarray(x, dtype=np.float32)
-    ).all():
-        raise NumericError(
-            f"request input carries non-finite values (graph {graph.name})",
-            graph=graph.name,
+    if not require_finite:
+        return
+    # scan in the native dtype first so an f64 request with NaN/Inf pixels
+    # is named as non-finite (field="values"), not as an f32 cast artifact;
+    # non-contiguous views are fine — numpy reductions never require
+    # contiguity (the engine's concatenate copies later anyway)
+    arr = np.asarray(x)
+    if arr.dtype == object or not (
+        np.issubdtype(arr.dtype, np.floating)
+        or np.issubdtype(arr.dtype, np.integer)
+        or np.issubdtype(arr.dtype, np.bool_)
+    ):
+        raise PreflightError(
+            f"request input dtype {arr.dtype} is not numeric"
+            f" (graph {graph.name})",
+            graph=graph.name, field="dtype",
         )
+    if np.issubdtype(arr.dtype, np.floating):
+        if not np.isfinite(arr).all():
+            raise NumericError(
+                f"request input carries non-finite values"
+                f" (graph {graph.name})",
+                graph=graph.name, field="values",
+            )
+        if arr.dtype.itemsize > 4 and not _fits_f32(arr):
+            # finite in f64 but overflows the f32 the kernels compute in —
+            # admitting it would poison the padded bucket with Infs
+            raise NumericError(
+                f"request input is finite in {arr.dtype} but overflows"
+                f" float32, the serving compute dtype"
+                f" (graph {graph.name})",
+                graph=graph.name, field="range",
+            )
 
 
 def _check_plan_structure(plan) -> None:
